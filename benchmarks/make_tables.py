@@ -1,0 +1,55 @@
+"""Generate the EXPERIMENTS.md markdown tables from dry-run artifacts."""
+import json
+import pathlib
+import sys
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def fmt(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.3g}"
+
+
+def table(variant: str):
+    d = ART / variant
+    rows = []
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        rl = r["roofline"]
+        dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        frac = (rl["t_compute_s"] / dom) if dom else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rl['t_compute_s'])} | "
+            f"{fmt(rl['t_memory_s'])} | {fmt(rl['t_collective_s'])} | "
+            f"{rl['bottleneck'][:4]} | {rl['useful_flop_ratio']:.2f} | "
+            f"{frac:.2f} | {r['compile_s']:.0f}s |")
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "useful | roofline-frac | compile |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def memory_table(variant: str):
+    d = ART / variant
+    rows = []
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        m = r.get("memory_analysis", {})
+        arg = m.get("argument_size_in_bytes", 0) / 1e9
+        tmp = m.get("temp_size_in_bytes", 0) / 1e9
+        peak = m.get("peak_memory_in_bytes", 0) / 1e9
+        rows.append(f"| {r['arch']} | {r['shape']} | {arg:.2f} | {tmp:.2f} | "
+                    f"{peak:.2f} |")
+    hdr = ("| arch | shape | args GB/dev | temps GB/dev | peak GB/dev |\n"
+           "|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    variant = sys.argv[1] if len(sys.argv) > 1 else "single"
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    print(table(variant) if which == "roofline" else memory_table(variant))

@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py must have run;
+this reads benchmarks/artifacts/dryrun/<mesh>[/variant]/*.json)."""
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load(mesh="single"):
+    recs = []
+    d = ART / mesh
+    if not d.exists():
+        return recs
+    for p in sorted(d.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main(force=False):
+    for mesh in ("single", "multi"):
+        for r in load(mesh):
+            rl = r["roofline"]
+            dom = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 r["compile_s"] * 1e6,
+                 f"tc={rl['t_compute_s']:.3e};tm={rl['t_memory_s']:.3e};"
+                 f"tx={rl['t_collective_s']:.3e};bn={rl['bottleneck']};"
+                 f"useful={rl['useful_flop_ratio']:.3f}")
+    # optimized variants (written by the §Perf hillclimb)
+    for d in sorted(ART.glob("single-*")):
+        for p in sorted(d.glob("*.json")):
+            r = json.loads(p.read_text())
+            rl = r["roofline"]
+            emit(f"roofline/{d.name}/{r['arch']}/{r['shape']}",
+                 r["compile_s"] * 1e6,
+                 f"tc={rl['t_compute_s']:.3e};tm={rl['t_memory_s']:.3e};"
+                 f"tx={rl['t_collective_s']:.3e};bn={rl['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

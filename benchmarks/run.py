@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--force] [--only fig7,...]
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true",
+                    help="recompute instead of using cached artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (fig2,fig7,fig8,fig9,"
+                         "lease,kernels,roofline)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig2_rdma_gap, fig7_speedup, fig8_scaling,
+                            fig9_xtreme, kernel_bench, lease_sensitivity,
+                            roofline)
+    suites = [
+        ("fig2", fig2_rdma_gap.main),
+        ("fig7", fig7_speedup.main),
+        ("fig8", fig8_scaling.main),
+        ("fig9", fig9_xtreme.main),
+        ("lease", lease_sensitivity.main),
+        ("kernels", kernel_bench.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        try:
+            fn(force=args.force)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Lease-synchronized local SGD (HALCONE's write-lease applied to DP
+training): wr_lease=4 cuts parameter-sync bytes ~4x at equal-ish loss.
+
+    PYTHONPATH=src python examples/coherent_localsgd.py
+"""
+import jax
+import numpy as np
+
+from repro import configs as cfgs
+from repro.coherence.lease_sync import LeaseConfig, VmappedWorkers
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw
+
+
+def run(wr_lease, steps=16):
+    cfg = cfgs.SMOKE["smollm-360m"]
+    data = SyntheticLM(cfg, DataConfig(global_batch=2, seq_len=64))
+    w = VmappedWorkers(cfg, adamw.AdamWConfig(lr=1e-3, warmup_steps=2),
+                       LeaseConfig(wr_lease=wr_lease), n_workers=2,
+                       key=jax.random.PRNGKey(0))
+    loss = None
+    for s in range(steps):
+        b = data.batch(s)["tokens"]
+        loss = w.step({"tokens": np.stack([b[0:1], b[1:2]])})
+    return loss, w.collective_bytes, w.clock.memts
+
+
+def main():
+    l1, b1, _ = run(wr_lease=1)
+    l4, b4, ts = run(wr_lease=4)
+    print(f"sync DP (W=1):    final loss {l1:.3f}, sync bytes {b1:,}")
+    print(f"lease  (W=4):     final loss {l4:.3f}, sync bytes {b4:,} "
+          f"({b1/max(b4,1):.1f}x fewer), Lamport memts={ts}")
+    assert b4 * 3 < b1
+    print("OK: write-lease cut parameter-sync traffic ~4x")
+
+
+if __name__ == "__main__":
+    main()

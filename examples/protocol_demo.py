@@ -1,0 +1,37 @@
+"""HALCONE protocol walkthrough: the paper's Fig.5 litmus scenarios with the
+event-by-event read results and final logical clocks.
+
+    PYTHONPATH=src python examples/protocol_demo.py
+"""
+import numpy as np
+
+from repro.core import simulate, sm_wt_halcone, traces
+
+
+def show(title, cfg, ops, addrs, cus):
+    r = simulate(cfg, ops, addrs)
+    print(f"\n== {title} ==")
+    for cu in cus:
+        log = np.asarray(r["read_log"][cu])
+        print(f"  CU{cu}: ops={list(np.asarray(ops[cu]))} "
+              f"reads->versions={list(log)}")
+    print(f"  final L1 cts: {list(np.asarray(r['state'].l1_cts))}")
+    print(f"  counters: l1_to_l2={float(r['counters']['l1_to_l2']):.0f} "
+          f"l2_to_mm={float(r['counters']['l2_to_mm']):.0f} "
+          f"coh_miss_l1={float(r['counters']['coh_miss_l1']):.0f}")
+
+
+def main():
+    cfg = sm_wt_halcone(n_gpus=2, cus_per_gpu=2)
+    ops, addrs = traces.litmus_intra(cfg)
+    show("Fig 5(a) intra-GPU: CU0/CU1 of GPU0", cfg, ops, addrs, [0, 1])
+    print("  -> I0-3 reads the OLD value (read-in-the-past);"
+          " I1-3 coherency-misses and sees the write.")
+    ops, addrs = traces.litmus_inter(cfg)
+    show("Fig 5(b) inter-GPU: GPU0 vs GPU1", cfg, ops, addrs, [0, 2])
+    print("  -> the final read on GPU1 refetches from shared MM: coherent"
+          " with zero invalidation traffic.")
+
+
+if __name__ == "__main__":
+    main()

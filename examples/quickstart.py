@@ -1,0 +1,30 @@
+"""Quickstart: train a reduced smollm on synthetic data for 30 steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro import configs as cfgs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = cfgs.SMOKE["smollm-360m"]
+    mesh = make_host_mesh()
+    data = SyntheticLM(cfg, DataConfig(global_batch=4, seq_len=64))
+    trainer = Trainer(cfg, mesh,
+                      tcfg=TrainerConfig(total_steps=30, ckpt_period=10,
+                                         ckpt_dir="/tmp/repro_quickstart"),
+                      data=data)
+    out = trainer.run()
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"step 0 loss={first:.3f}  ->  step {out['final_step']} "
+          f"loss={last:.3f} (events: {out['events']})")
+    assert last < first, "loss should decrease on the synthetic stream"
+    print("OK: loss decreased; checkpoints in /tmp/repro_quickstart")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Write-through checkpointing with restore-time resharding.
+
+HALCONE's WT policy is what makes its timestamp overflow safe (MM always has
+the data); this manager plays the MM role for the trainer: every `period`
+steps the full sharded state is written through to durable storage, so any
+worker ("cache") can be lost and refilled.  Restore accepts a DIFFERENT mesh
+than the one that saved (elastic scaling): arrays are re-device_put under the
+new shardings.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}")
+    elif hasattr(tree, "_fields"):                    # NamedTuple
+        for k in tree._fields:
+            yield from _flatten(getattr(tree, k), f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat, f"{prefix}/{k}")
+                for k in sorted(template)}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_into(getattr(template, k), flat, f"{prefix}/{k}")
+            for k in template._fields])
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(template))
+    return flat[prefix]
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        """Write-through: snapshot to host memory synchronously (cheap), then
+        persist in a background thread (off the training critical path —
+        HALCONE's TSU-parallel-to-DRAM placement, in spirit)."""
+        flat = {p: np.asarray(v) for p, v in _flatten(state)}
+        meta = {"step": int(step), "time": time.time(),
+                "extra": extra or {},
+                "leaves": {p: [list(v.shape), str(v.dtype)]
+                           for p, v in flat.items()}}
+        self.wait()
+
+        def _write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            tmp.mkdir(parents=True, exist_ok=True)
+            np.savez(tmp / "state.npz",
+                     **{p.replace("/", "|"): v for p, v in flat.items()})
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)                       # atomic durability point
+            self._gc()
+
+        if self.async_write:
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        ckpts = sorted(self.dir.glob("step_*"))
+        ckpts = [c for c in ckpts if c.is_dir() and not c.suffix == ".tmp"]
+        for c in ckpts[:-self.keep]:
+            shutil.rmtree(c, ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        ckpts = sorted(self.dir.glob("step_*"))
+        ckpts = [c for c in ckpts if c.is_dir()]
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(self, step: Optional[int], template: Any,
+                shardings: Any = None) -> Any:
+        """Rebuild `template`-structured state; device_put under `shardings`
+        (which may target a different mesh than the writer's — elastic)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no checkpoint found"
+        path = self.dir / f"step_{step:08d}"
+        data = np.load(path / "state.npz")
+        flat = {k.replace("|", "/"): data[k] for k in data.files}
+        state = _unflatten_into(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state

@@ -1,0 +1,99 @@
+"""Lease-coherent prefix-KV cache for multi-replica serving.
+
+The serving-side transfer of HALCONE (DESIGN.md §2b): prefill results (prefix
+KV blocks) are shared across serving replicas.  The authoritative store plays
+the MM+TSU; each replica's local cache holds blocks with (wts, rts) leases and
+*self-invalidates* on expiry instead of receiving invalidation messages when a
+prefix is recomputed/updated (e.g. after a model refresh or cache eviction
+upstream).  Identical timestamp rules to repro.core.protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core import protocol
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    version: int
+    memts: int = 0
+
+
+class AuthoritativeStore:
+    """The MM+TSU: versioned prefix blocks + memts per key."""
+
+    def __init__(self, rd_lease: int = 8, wr_lease: int = 4):
+        self.rd_lease = rd_lease
+        self.wr_lease = wr_lease
+        self.blocks: Dict[str, _Entry] = {}
+
+    def write(self, key: str, value: Any) -> Tuple[int, int]:
+        e = self.blocks.get(key)
+        memts = e.memts if e else 0
+        lease, new_memts = protocol.mm_write(memts, self.wr_lease)
+        ver = (e.version + 1) if e else 1
+        self.blocks[key] = _Entry(value, ver, new_memts)
+        return int(lease.wts), int(lease.rts)
+
+    def read(self, key: str) -> Optional[Tuple[Any, int, int, int]]:
+        e = self.blocks.get(key)
+        if e is None:
+            return None
+        lease, e.memts = protocol.mm_read(e.memts, self.rd_lease)
+        return e.value, e.version, int(lease.wts), int(lease.rts)
+
+
+class LeaseKVCache:
+    """A serving replica's local cache with a logical clock.
+
+    cts advances on every local admission of a new version (a 'write' in
+    protocol terms: the replica observed new state).  Reads hit while
+    cts <= rts; expiry triggers a refetch from the store — NO invalidation
+    traffic ever flows between replicas.
+    """
+
+    def __init__(self, store: AuthoritativeStore, capacity: int = 128):
+        self.store = store
+        self.capacity = capacity
+        self.cts = 0
+        self.local: Dict[str, dict] = {}
+        self.stats = {"hits": 0, "coherence_misses": 0, "compulsory": 0,
+                      "refetches": 0, "capacity_evictions": 0}
+
+    def get(self, key: str):
+        ent = self.local.get(key)
+        if ent is not None and protocol.valid(self.cts, ent["rts"]):
+            self.stats["hits"] += 1
+            return ent["value"], ent["version"]
+        if ent is not None:
+            self.stats["coherence_misses"] += 1
+        else:
+            self.stats["compulsory"] += 1
+        got = self.store.read(key)
+        if got is None:
+            return None
+        value, ver, wts, rts = got
+        self.stats["refetches"] += 1
+        lease = protocol.install(self.cts, wts, rts)
+        self._install(key, value, ver, int(lease.wts), int(lease.rts))
+        return value, ver
+
+    def put(self, key: str, value: Any):
+        """Local write-through: publish to the store, adopt its lease, and
+        advance this replica's clock (cts = max(cts, wts))."""
+        wts, rts = self.store.write(key, value)
+        lease = protocol.install(self.cts, wts, rts)
+        self.cts = int(protocol.cts_after_write(self.cts, lease.wts))
+        ver = self.store.blocks[key].version
+        self._install(key, value, ver, int(lease.wts), int(lease.rts))
+
+    def _install(self, key, value, ver, wts, rts):
+        if len(self.local) >= self.capacity and key not in self.local:
+            victim = min(self.local, key=lambda k: self.local[k]["rts"])
+            del self.local[victim]
+            self.stats["capacity_evictions"] += 1
+        self.local[key] = {"value": value, "version": ver,
+                           "wts": wts, "rts": rts}

@@ -1,0 +1,454 @@
+"""Vectorized MGPU memory-hierarchy simulator.
+
+TPU-native re-formulation of the paper's event-driven MGPUSim model: the
+protocol advances in *rounds* (one instruction per CU per round) inside a
+``lax.scan``; every L1/L2/TSU probe, fill and timestamp update is executed as
+a dense array operation batched over all 128+ CUs at once.  Timing is a
+mean-value queueing model: fixed component latencies plus per-round occupancy
+delays at L2 banks / HBM stacks / PCIe links.
+
+Modeled systems (sysconfig.py): RDMA-WB-NC, RDMA-WB-C-HMG (VI-style home
+directory over PCIe), SM-WB-NC, SM-WT-NC, SM-WT-C-HALCONE.
+
+Approximations vs. the event-driven original (documented in DESIGN.md §4):
+lockstep instruction issue (per-CU latencies still accrue independently);
+same-round same-address writes share one logical tick (ties broken by
+physical order, as §3.2); queueing delay is the mean of the round's occupancy
+rather than a per-message schedule.
+
+Trace op encoding: 0=nop, 1=read, 2=write, 3=fence (kernel boundary -> cts
+jumps to the global maximum), 4=compute (addr field = cycles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol
+from repro.core.sysconfig import SystemConfig
+
+NOP, READ, WRITE, FENCE, COMPUTE = 0, 1, 2, 3, 4
+INVALID = jnp.int32(-1)
+
+
+class SimState(NamedTuple):
+    # L1: per CU
+    l1_tag: jnp.ndarray    # [NC, S1, W1+1] int32 (-1 invalid; last way=trash)
+    l1_rts: jnp.ndarray
+    l1_wts: jnp.ndarray
+    l1_ver: jnp.ndarray
+    l1_lru: jnp.ndarray
+    l1_cts: jnp.ndarray    # [NC]
+    # L2: per (gpu*banks)
+    l2_tag: jnp.ndarray    # [NL2, S2, W2+1]
+    l2_rts: jnp.ndarray
+    l2_wts: jnp.ndarray
+    l2_ver: jnp.ndarray
+    l2_lru: jnp.ndarray
+    l2_dirty: jnp.ndarray
+    l2_cts: jnp.ndarray    # [NL2]
+    # TSU: per HBM stack
+    tsu_tag: jnp.ndarray   # [NH, ST, TW+1]
+    tsu_memts: jnp.ndarray
+    # main memory (authoritative data versions)
+    mm_ver: jnp.ndarray    # [A]
+    # HMG directory
+    dir_sharers: jnp.ndarray  # [A, G] bool (hmg only; [1,1] otherwise)
+    # timing / counters
+    time: jnp.ndarray      # [NC] f32
+    ctr: dict              # scalars f32
+
+
+COUNTERS = ("l1_to_l2", "l2_to_mm", "l1_hits", "l2_hits", "coh_miss_l1",
+            "coh_miss_l2", "wb_evictions", "inval_msgs", "pcie_blocks",
+            "reads", "writes")
+
+
+def init_state(cfg: SystemConfig, n_addr: int) -> SimState:
+    NC = cfg.n_cus
+    NL2 = cfg.n_gpus * cfg.l2_banks
+    shp1 = (NC, cfg.l1_sets, cfg.l1_ways + 1)
+    shp2 = (NL2, cfg.l2_sets, cfg.l2_ways + 1)
+    shpt = (cfg.n_hbm, cfg.tsu_sets, cfg.tsu_ways + 1)
+    G = cfg.n_gpus if cfg.protocol == "hmg" else 1
+    A = n_addr if cfg.protocol == "hmg" else 1
+    z = lambda s: jnp.zeros(s, jnp.int32)
+    return SimState(
+        l1_tag=jnp.full(shp1, INVALID), l1_rts=z(shp1), l1_wts=z(shp1),
+        l1_ver=z(shp1), l1_lru=z(shp1), l1_cts=z((NC,)),
+        l2_tag=jnp.full(shp2, INVALID), l2_rts=z(shp2), l2_wts=z(shp2),
+        l2_ver=z(shp2), l2_lru=z(shp2), l2_dirty=jnp.zeros(shp2, bool),
+        l2_cts=z((NL2,)),
+        tsu_tag=jnp.full(shpt, INVALID), tsu_memts=z(shpt),
+        mm_ver=z((n_addr,)),
+        dir_sharers=jnp.zeros((A, G), bool),
+        time=jnp.zeros((NC,), jnp.float32),
+        ctr={k: jnp.zeros((), jnp.float32) for k in COUNTERS},
+    )
+
+
+def _probe(tag_arr, idx, set_idx, addr):
+    """tag_arr: [N, S, W+1]; returns (hit, way) over live ways."""
+    rows = tag_arr[idx, set_idx][:, :-1]          # [n, W]
+    eq = rows == addr[:, None]
+    return eq.any(-1), jnp.argmax(eq, -1)
+
+
+def _victim(tag_arr, lru_arr, idx, set_idx):
+    rows_t = tag_arr[idx, set_idx][:, :-1]
+    rows_l = lru_arr[idx, set_idx][:, :-1]
+    score = jnp.where(rows_t == INVALID, jnp.int32(-2**30), rows_l)
+    return jnp.argmin(score, -1)
+
+
+def _queue_delay(cache_idx, active, n_queues, service):
+    """Saturation queueing: a round's n requests to one port drain serially,
+    so each waits ~(n-1)*service (calibrated against Fig 8's saturation)."""
+    counts = jnp.zeros((n_queues,), jnp.float32).at[
+        jnp.where(active, cache_idx, 0)].add(active.astype(jnp.float32))
+    mine = counts[cache_idx]
+    return jnp.where(active, jnp.maximum(mine - 1.0, 0.0) * service, 0.0)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=64)
+def _sim_fn(cfg: SystemConfig, n_addr: int, T: int):
+    step = _make_round(cfg, n_addr)
+
+    def run(state, ops_t, addrs_t):
+        return jax.lax.scan(step, state,
+                            (ops_t, addrs_t, jnp.arange(T, dtype=jnp.int32)))
+
+    return jax.jit(run)
+
+
+def simulate(cfg: SystemConfig, ops, addrs):
+    """Host wrapper: buckets shapes (compile reuse), runs the scan."""
+    ops = np.asarray(ops, np.int32)
+    addrs = np.asarray(addrs, np.int32)
+    n_addr = _next_pow2(int(addrs.max()) + 2)
+    T0 = ops.shape[1]
+    T = _next_pow2(T0)
+    if T != T0:                              # pad with NOPs (no effect)
+        pad = ((0, 0), (0, T - T0))
+        ops = np.pad(ops, pad)
+        addrs = np.pad(addrs, pad)
+    state = init_state(cfg, n_addr)
+    state, read_log = _sim_fn(cfg, n_addr, T)(state, jnp.asarray(ops).T,
+                                              jnp.asarray(addrs).T)
+    # Runtime: CUs within a GPU hide each other's latency (warp interleaving)
+    # -> per-GPU throughput ~ mean CU time; GPUs don't share work -> max.
+    per_gpu = state.time.reshape(cfg.n_gpus, cfg.cus_per_gpu).mean(axis=1)
+    return {
+        "cycles": jnp.max(per_gpu),
+        "makespan_max": jnp.max(state.time),
+        "per_cu_time": state.time,
+        "counters": state.ctr,
+        "read_log": read_log.T[:, :T0],  # [NC, T] version returned (-1 = no read)
+        "state": state,
+    }
+
+
+def _make_round(cfg: SystemConfig, n_addr: int):
+    NC = cfg.n_cus
+    G, NB, CU = cfg.n_gpus, cfg.l2_banks, cfg.cus_per_gpu
+    NL2 = G * NB
+    NH = cfg.n_hbm
+    coherent = cfg.protocol == "halcone"
+    hmg = cfg.protocol == "hmg"
+    rdma = cfg.topology == "rdma"
+    wb = cfg.l2_policy == "wb"
+    cu_ids = jnp.arange(NC, dtype=jnp.int32)
+    gpu_of = cu_ids // CU
+
+    def home_gpu(addr):
+        return (addr // cfg.page_blocks) % G
+
+    def hbm_of(addr):
+        return (addr // cfg.page_blocks) % NH
+
+    def round_step(st: SimState, xs):
+        op, addr, rnd = xs
+        is_read = op == READ
+        is_write = op == WRITE
+        is_fence = op == FENCE
+        is_comp = op == COMPUTE
+        mem = is_read | is_write
+        ctr = dict(st.ctr)
+
+        # ---------------- L1 probe ----------------
+        s1 = addr % cfg.l1_sets
+        hit1_tag, way1 = _probe(st.l1_tag, cu_ids, s1, addr)
+        rts1 = st.l1_rts[cu_ids, s1, way1]
+        lease1 = protocol.valid(st.l1_cts, rts1) if coherent else True
+        l1_hit = hit1_tag & lease1 & mem
+        coh1 = hit1_tag & mem & (~l1_hit)
+
+        need_l2 = (is_read & ~l1_hit) | is_write        # WT L1, writes descend
+        remote = (home_gpu(addr) != gpu_of) & rdma
+
+        # L2 instance: SM -> own GPU; RDMA-NC -> home GPU's L2;
+        # HMG -> local first, then home.
+        bank = addr % NB
+        own_l2 = gpu_of * NB + bank
+        home_l2 = home_gpu(addr) * NB + bank
+        if rdma and not hmg:
+            l2c = jnp.where(remote, home_l2, own_l2)
+        else:
+            l2c = own_l2
+
+        s2 = (addr // NB) % cfg.l2_sets
+        hit2_tag, way2 = _probe(st.l2_tag, l2c, s2, addr)
+        rts2 = st.l2_rts[l2c, s2, way2]
+        lease2 = protocol.valid(st.l2_cts[l2c], rts2) if coherent else True
+        l2_hit = hit2_tag & lease2 & need_l2
+        coh2 = hit2_tag & need_l2 & (~l2_hit)
+
+        # HMG second-level probe at the home node for local misses
+        if hmg:
+            hitH_tag, wayH = _probe(st.l2_tag, home_l2, s2, addr)
+            home_hit = hitH_tag & need_l2 & ~l2_hit & remote
+        else:
+            home_hit = jnp.zeros_like(l2_hit)
+            wayH = way2
+
+        # who reaches MM:  WT: all writes; WB: write misses (allocate) + read
+        # misses.  HALCONE: writes always; read misses.
+        if wb:
+            need_mm = need_l2 & ~l2_hit & ~home_hit
+        else:
+            need_mm = (is_write | (need_l2 & ~l2_hit & ~home_hit))
+
+        # ---------------- TSU / MM ----------------
+        hb = hbm_of(addr)
+        if coherent:
+            ts_set = addr % cfg.tsu_sets
+            hitT, wayT = _probe(st.tsu_tag, hb, ts_set, addr)
+            vT = _victim(st.tsu_tag, st.tsu_memts, hb, ts_set)
+            wayT = jnp.where(hitT, wayT, vT)
+            memts = jnp.where(hitT, st.tsu_memts[hb, ts_set, wayT], 0)
+            r_lease, r_memts = protocol.mm_read(memts, cfg.rd_lease)
+            w_lease, w_memts = protocol.mm_write(memts, cfg.wr_lease)
+            mwts = jnp.where(is_write, w_lease.wts, r_lease.wts)
+            mrts = jnp.where(is_write, w_lease.rts, r_lease.rts)
+            new_memts = jnp.where(is_write, w_memts, r_memts)
+            # 16-bit overflow: re-initialize (WT makes this safe)
+            ovf = new_memts > protocol.TS_MAX
+            mwts = jnp.where(ovf, 0, mwts)
+            mrts = jnp.where(ovf, jnp.where(is_write, cfg.wr_lease,
+                                            cfg.rd_lease), mrts)
+            new_memts = jnp.where(ovf, mrts, new_memts)
+            tsu_active = need_mm
+            tw = jnp.where(tsu_active, wayT, cfg.tsu_ways)
+            new_tag = st.tsu_tag.at[hb, ts_set, tw].max(
+                jnp.where(tsu_active, addr, INVALID))
+            # scatter-max memts so same-round same-addr requests keep the
+            # largest extension (logical ties share a tick; §3.2)
+            cleared = jnp.where(tsu_active & ~hitT, 0,
+                                st.tsu_memts[hb, ts_set, tw])
+            tsu_memts = st.tsu_memts.at[hb, ts_set, tw].set(
+                jnp.where(tsu_active, jnp.maximum(cleared, 0), cleared))
+            tsu_memts = tsu_memts.at[hb, ts_set, tw].max(
+                jnp.where(tsu_active, new_memts, 0))
+            tsu_tag = new_tag
+        else:
+            mwts = jnp.zeros((NC,), jnp.int32)
+            mrts = jnp.full((NC,), 2**30, jnp.int32)
+            tsu_tag, tsu_memts = st.tsu_tag, st.tsu_memts
+
+        # MM data versions: writes increment (scatter-add); then everyone
+        # who reads MM sees the post-round version (same-tick semantics).
+        wr_mask = is_write
+        mm_ver = st.mm_ver.at[jnp.where(wr_mask, addr, n_addr - 1)].add(
+            wr_mask.astype(jnp.int32))
+        mm_val = mm_ver[addr]
+
+        # ---------------- response values ----------------
+        l1_val = st.l1_ver[cu_ids, s1, way1]
+        l2_val = st.l2_ver[l2c, s2, way2]
+        home_val = st.l2_ver[home_l2, s2, wayH]
+        read_val = jnp.where(l1_hit, l1_val,
+                             jnp.where(l2_hit, l2_val,
+                                       jnp.where(home_hit, home_val, mm_val)))
+        read_log = jnp.where(is_read, read_val, -1)
+
+        # value that lands in caches on a write: the post-write version
+        fill_val = jnp.where(is_write, mm_val, read_val)
+
+        # ---------------- timestamp updates ----------------
+        # L2 fill from MM (or lease from TSU)
+        wts_from_l2 = jnp.where(l2_hit | home_hit,
+                                jnp.where(l2_hit, st.l2_wts[l2c, s2, way2],
+                                          st.l2_wts[home_l2, s2, wayH]),
+                                mwts)
+        rts_from_l2 = jnp.where(l2_hit | home_hit,
+                                jnp.where(l2_hit, rts2,
+                                          st.l2_rts[home_l2, s2, wayH]),
+                                mrts)
+        if coherent:
+            l2_lease = protocol.install(st.l2_cts[l2c], mwts, mrts)
+            l2_new_wts = jnp.where(l2_hit, st.l2_wts[l2c, s2, way2],
+                                   l2_lease.wts)
+            l2_new_rts = jnp.where(l2_hit, rts2, l2_lease.rts)
+            # writes refresh the lease even on a hit
+            wl = protocol.install(st.l2_cts[l2c], mwts, mrts)
+            l2_new_wts = jnp.where(is_write, wl.wts, l2_new_wts)
+            l2_new_rts = jnp.where(is_write, wl.rts, l2_new_rts)
+            resp_wts = jnp.where(need_mm | is_write, l2_new_wts, wts_from_l2)
+            resp_rts = jnp.where(need_mm | is_write, l2_new_rts, rts_from_l2)
+            l1_lease = protocol.install(st.l1_cts, resp_wts, resp_rts)
+        else:
+            zero = jnp.zeros((NC,), jnp.int32)
+            big = jnp.full((NC,), 2**30, jnp.int32)
+            l2_new_wts, l2_new_rts = zero, big
+            resp_wts, resp_rts = zero, big
+            l1_lease = protocol.Lease(zero, big)
+
+        # ---------------- install into L2 ----------------
+        l2_install = need_l2 & (~l2_hit | is_write)
+        v2 = _victim(st.l2_tag, st.l2_lru, l2c, s2)
+        w2i = jnp.where(l2_hit, way2, v2)
+        dirty_evict = (st.l2_dirty[l2c, s2, w2i] &
+                       (st.l2_tag[l2c, s2, w2i] != INVALID) & ~l2_hit &
+                       l2_install) if wb else jnp.zeros_like(l2_install)
+        w2s = jnp.where(l2_install, w2i, cfg.l2_ways)       # trash slot
+        l2_tag = st.l2_tag.at[l2c, s2, w2s].set(
+            jnp.where(l2_install, addr, INVALID))
+        l2_ver = st.l2_ver.at[l2c, s2, w2s].set(fill_val)
+        l2_rts = st.l2_rts.at[l2c, s2, w2s].set(l2_new_rts)
+        l2_wts = st.l2_wts.at[l2c, s2, w2s].set(l2_new_wts)
+        l2_lru_new = st.l2_lru.at[l2c, s2,
+                                  jnp.where(need_l2, w2i, cfg.l2_ways)].set(rnd)
+        l2_dirty = st.l2_dirty
+        if wb:
+            l2_dirty = l2_dirty.at[l2c, s2, w2s].set(is_write & l2_install)
+            l2_dirty = l2_dirty.at[
+                l2c, s2, jnp.where(l2_hit & is_write, way2,
+                                   cfg.l2_ways)].set(True)
+        if coherent:
+            # max with 0 is a no-op for non-writers
+            l2_cts = st.l2_cts.at[l2c].max(
+                jnp.where(is_write, protocol.cts_after_write(
+                    st.l2_cts[l2c], l2_new_wts), 0))
+        else:
+            l2_cts = st.l2_cts
+
+        # HMG: writer invalidates every sharer copy (VI), pays PCIe msgs
+        inval_msgs = jnp.zeros((), jnp.float32)
+        if hmg:
+            w_addrs = jnp.where(is_write, addr, -7)
+            shr = st.dir_sharers[addr]                       # [NC, G]
+            n_shr = (shr.sum(-1) - shr[cu_ids, gpu_of]) * is_write
+            inval_msgs = jnp.sum(n_shr.astype(jnp.float32))
+            tag_mask = (l2_tag[..., None] == w_addrs) \
+                       & is_write[None, None, None, :]
+            kill = tag_mask.any(-1)
+            # keep the writer's own copy
+            own_keep = jnp.zeros_like(kill)
+            own_keep = own_keep.at[l2c, s2, w2s].set(is_write)
+            kill = kill & ~own_keep
+            l2_tag = jnp.where(kill, INVALID, l2_tag)
+            new_shr = jnp.zeros_like(shr)
+            new_shr = new_shr.at[cu_ids, gpu_of].set(is_write | is_read)
+            dir_sharers = st.dir_sharers.at[
+                jnp.where(is_write, addr, n_addr - 1)].min(
+                    jnp.where(is_write[:, None], new_shr, True))
+            dir_sharers = dir_sharers.at[
+                jnp.where(mem, addr, n_addr - 1), gpu_of].set(True)
+        else:
+            dir_sharers = st.dir_sharers
+
+        # ---------------- install into L1 ----------------
+        l1_install = mem & (~l1_hit | is_write)
+        v1 = _victim(st.l1_tag, st.l1_lru, cu_ids, s1)
+        w1i = jnp.where(hit1_tag, way1, v1)
+        w1s = jnp.where(l1_install, w1i, cfg.l1_ways)
+        l1_tag = st.l1_tag.at[cu_ids, s1, w1s].set(
+            jnp.where(l1_install, addr, INVALID))
+        l1_ver = st.l1_ver.at[cu_ids, s1, w1s].set(fill_val)
+        l1_rts = st.l1_rts.at[cu_ids, s1, w1s].set(l1_lease.rts)
+        l1_wts = st.l1_wts.at[cu_ids, s1, w1s].set(l1_lease.wts)
+        l1_lru = st.l1_lru.at[cu_ids, s1,
+                              jnp.where(mem, w1i, cfg.l1_ways)].set(rnd)
+        if coherent:
+            l1_cts = jnp.where(is_write,
+                               protocol.cts_after_write(st.l1_cts,
+                                                        l1_lease.wts),
+                               st.l1_cts)
+        else:
+            l1_cts = st.l1_cts
+
+        # fences: kernel boundary -> clocks jump to the global max
+        if coherent:
+            any_fence = jnp.any(is_fence)
+            gmax = jnp.maximum(jnp.max(l1_cts), jnp.max(l2_cts))
+            l1_cts = jnp.where(is_fence, gmax, l1_cts)
+            l2_cts = jnp.where(any_fence, jnp.maximum(l2_cts, gmax), l2_cts)
+
+        # ---------------- timing ----------------
+        q_l2 = _queue_delay(l2c, need_l2, NL2, cfg.l2_service)
+        mm_users = need_mm | dirty_evict if wb else need_mm
+        q_mm = _queue_delay(hb, mm_users, NH, cfg.mm_service)
+        pcie_hop = (remote & (need_l2 if not hmg else (need_mm | home_hit))) \
+            if rdma else jnp.zeros_like(need_l2)
+        q_pcie = _queue_delay(gpu_of, pcie_hop, G, cfg.pcie_service)
+        # Reads block the issuing warp for the hierarchy round trip; a CU's
+        # other wavefronts overlap ~mlp outstanding misses (latency hiding).
+        read_lat = cfg.l1_lat + (
+            need_l2 * (cfg.l2_lat + q_l2)
+            + need_mm * (cfg.mm_lat + q_mm)
+            + pcie_hop * (cfg.pcie_lat + q_pcie)) / cfg.mlp
+        # Writes are POSTED: they consume bandwidth (queue terms above count
+        # them) but don't stall the warp — except WB write-allocate fetches
+        # and the dirty-eviction serialization the paper describes (§5.1).
+        write_lat = cfg.l1_lat + q_l2
+        if wb:
+            write_lat = write_lat + (need_mm * (cfg.mm_lat + q_mm)
+                + pcie_hop * (cfg.pcie_lat + q_pcie)) / cfg.mlp
+        lat = jnp.where(is_read, read_lat,
+                        jnp.where(is_write, write_lat, 0.0))
+        if wb:
+            lat = lat + dirty_evict * (cfg.mm_lat + q_mm) / cfg.mlp
+        lat = lat + is_comp * addr.astype(jnp.float32)
+        if hmg:
+            lat = lat + is_write * (st.dir_sharers[addr].sum(-1)
+                                    > 1) * cfg.pcie_lat
+        time = st.time + jnp.where(mem | is_comp, lat, 0.0)
+
+        # ---------------- counters ----------------
+        f = lambda x: jnp.sum(x.astype(jnp.float32))
+        ctr["reads"] += f(is_read)
+        ctr["writes"] += f(is_write)
+        ctr["l1_hits"] += f(l1_hit & is_read)
+        ctr["l2_hits"] += f(l2_hit & need_l2)
+        ctr["l1_to_l2"] += f(need_l2)
+        ctr["l2_to_mm"] += f(need_mm) + (f(dirty_evict) if wb else 0.0)
+        ctr["coh_miss_l1"] += f(coh1 & is_read) if coherent else 0.0
+        ctr["coh_miss_l2"] += f(coh2 & is_read) if coherent else 0.0
+        ctr["wb_evictions"] += f(dirty_evict) if wb else 0.0
+        ctr["inval_msgs"] += inval_msgs if hmg else 0.0
+        ctr["pcie_blocks"] += f(pcie_hop) if rdma else 0.0
+
+        new_st = SimState(
+            l1_tag=l1_tag, l1_rts=l1_rts, l1_wts=l1_wts, l1_ver=l1_ver,
+            l1_lru=l1_lru, l1_cts=l1_cts,
+            l2_tag=l2_tag, l2_rts=l2_rts, l2_wts=l2_wts, l2_ver=l2_ver,
+            l2_lru=l2_lru_new, l2_dirty=l2_dirty, l2_cts=l2_cts,
+            tsu_tag=tsu_tag, tsu_memts=tsu_memts, mm_ver=mm_ver,
+            dir_sharers=dir_sharers, time=time, ctr=ctr)
+        return new_st, read_log
+
+    return round_step

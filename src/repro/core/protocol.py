@@ -1,0 +1,76 @@
+"""HALCONE's timestamp/lease rules as pure functions (Algorithms 1-5).
+
+These are the protocol's entire decision surface; the vectorized hierarchy
+engine (engine.py), the host-side lease caches (repro.coherence) and the
+Pallas lease-probe kernel all call / mirror exactly these rules.
+
+Timestamp conventions (validated against the paper's Fig.5 walkthrough):
+  MM read  of a block with TSU entry ``memts``:
+      Mwts = memts,     Mrts = memts + RdLease,  memts' = Mrts
+      (first read: memts=0 -> lease [0, RdLease] — Fig.5 step 4: [10, 0])
+  MM write:
+      Mwts = memts + 1, Mrts = memts + WrLease,  memts' = Mrts
+      (Fig.5: [Y] memts=7 -> wts=8, rts=12 with WrLease=5;
+       [X] memts=10 -> wts=11, rts=15 — the +1 orders the write strictly
+       after every read admitted under the previous lease.  Algorithm 3's
+       listing elides the +1; the worked example is authoritative.)
+  Cache install (read or write response with lease [wts_r, rts_r]):
+      Bwts = max(cts, wts_r); Brts = max(Bwts + 1, rts_r)
+  cts advances only on writes: cts' = max(cts, Bwts).
+  Validity (hit): tag match AND cts <= rts  (no lower bound: HALCONE permits
+  "reads in the past" — Fig.5 step 27-29 returns the old [X]).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+TS_BITS = 16
+TS_MAX = (1 << TS_BITS) - 1
+
+
+class Lease(NamedTuple):
+    wts: jnp.ndarray
+    rts: jnp.ndarray
+
+
+def mm_read(memts, rd_lease):
+    """TSU action for a read request. Returns (lease, new_memts)."""
+    wts = memts
+    rts = memts + rd_lease
+    return Lease(wts, rts), rts
+
+
+def mm_write(memts, wr_lease):
+    """TSU action for a write request. Returns (lease, new_memts)."""
+    wts = memts + 1
+    rts = memts + wr_lease
+    return Lease(wts, rts), rts
+
+
+def install(cts, wts_resp, rts_resp):
+    """Cache-block timestamp update on a fill/response (Algorithms 1,2,4,5)."""
+    bwts = jnp.maximum(cts, wts_resp)
+    brts = jnp.maximum(bwts + 1, rts_resp)
+    return Lease(bwts, brts)
+
+
+def cts_after_write(cts, bwts):
+    return jnp.maximum(cts, bwts)
+
+
+def valid(cts, rts):
+    """Lease validity: the block may be read while cts <= rts."""
+    return cts <= rts
+
+
+def overflow_reinit(ts):
+    """16-bit overflow: re-initialize to 0 instead of flushing (WT means MM
+    always holds the data, so the only cost is one extra MM access)."""
+    return jnp.where(ts > TS_MAX, jnp.zeros_like(ts), ts)
+
+
+def order_key(cts, physical_tiebreak):
+    """Memory ops are ordered by logical time, ties broken by physical time."""
+    return cts * 1_000_000 + physical_tiebreak

@@ -1,0 +1,80 @@
+"""System configurations for the paper's five evaluated MGPU systems (§4.1).
+
+Geometry is Table 2's real sizes (64 B blocks): L1 16KB 4-way, L2 256KB
+16-way x 8 banks/GPU, 8 HBM stacks, TSU 8-way.  Latency/bandwidth constants
+follow §4.1: PCIe4 32 GB/s/dir links, 1 TB/s aggregate L2<->MM, 100-cycle MC,
+50-cycle TSU (accessed in parallel with DRAM), 1 GHz clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    name: str = "SM-WT-C-HALCONE"
+    n_gpus: int = 4
+    cus_per_gpu: int = 32
+    topology: str = "sm"            # sm | rdma
+    l2_policy: str = "wt"           # wt | wb
+    protocol: str = "halcone"       # none | halcone | hmg
+    rd_lease: int = 10
+    wr_lease: int = 5
+    # geometry (64 B blocks)
+    l1_sets: int = 64
+    l1_ways: int = 4
+    l2_banks: int = 8
+    l2_sets: int = 256
+    l2_ways: int = 16
+    n_hbm: int = 8
+    tsu_sets: int = 2048
+    tsu_ways: int = 8
+    page_blocks: int = 64           # 4 KB pages interleaved across modules
+    # latencies (cycles @ 1 GHz)
+    l1_lat: float = 4.0
+    l2_lat: float = 28.0
+    mm_lat: float = 200.0           # incl. the calibrated 100-cycle MC
+    tsu_lat: float = 50.0           # parallel with DRAM -> off critical path
+    pcie_lat: float = 600.0
+    # per-64B-block service times (queuing): cycles/block
+    l2_service: float = 6.0         # effective bank occupancy per access
+    mm_service: float = 3.0         # row activation + 1TB/s aggregate
+    pcie_service: float = 2.0       # 32 GB/s = 32 B/cycle -> 2 cyc/block
+    mlp: float = 4.0                # per-CU memory-level parallelism: a CU's
+                                    # wavefronts overlap ~4 outstanding misses
+
+    @property
+    def n_cus(self) -> int:
+        return self.n_gpus * self.cus_per_gpu
+
+    @property
+    def coherent(self) -> bool:
+        return self.protocol == "halcone"
+
+
+def rdma_wb_nc(**kw) -> SystemConfig:
+    return SystemConfig(name="RDMA-WB-NC", topology="rdma", l2_policy="wb",
+                        protocol="none", **kw)
+
+
+def rdma_wb_hmg(**kw) -> SystemConfig:
+    return SystemConfig(name="RDMA-WB-C-HMG", topology="rdma", l2_policy="wb",
+                        protocol="hmg", **kw)
+
+
+def sm_wb_nc(**kw) -> SystemConfig:
+    return SystemConfig(name="SM-WB-NC", topology="sm", l2_policy="wb",
+                        protocol="none", **kw)
+
+
+def sm_wt_nc(**kw) -> SystemConfig:
+    return SystemConfig(name="SM-WT-NC", topology="sm", l2_policy="wt",
+                        protocol="none", **kw)
+
+
+def sm_wt_halcone(**kw) -> SystemConfig:
+    return SystemConfig(name="SM-WT-C-HALCONE", topology="sm", l2_policy="wt",
+                        protocol="halcone", **kw)
+
+
+ALL_CONFIGS = (rdma_wb_nc, rdma_wb_hmg, sm_wb_nc, sm_wt_nc, sm_wt_halcone)

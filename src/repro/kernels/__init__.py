@@ -1,0 +1,2 @@
+from repro.kernels.ops import (decode_attention, flash_attention,  # noqa: F401
+                               lease_probe, rmsnorm, ssd_chunk, use_pallas)

@@ -1,0 +1,59 @@
+"""HALCONE lease-probe kernel: the protocol engine's hot inner loop
+(tag compare + lease check + Algorithm 1/2 install math), batched over all
+concurrent requests.  This is the paper's per-request coherence action as a
+single fused VMEM pass — the Pallas face of repro.core.protocol."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(tag_ref, rts_ref, cts_ref, addr_ref, mwts_ref, mrts_ref,
+                  hit_ref, way_ref, nwts_ref, nrts_ref, ncts_ref):
+    tags = tag_ref[...]                                 # [bn, W]
+    rts = rts_ref[...]
+    cts = cts_ref[...]
+    addr = addr_ref[...]
+    eq = tags == addr[:, None]
+    tag_hit = eq.any(axis=-1)
+    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    row_rts = jnp.sum(jnp.where(eq, rts, 0), axis=-1)   # unique hit way
+    hit = tag_hit & (cts <= row_rts)
+    # protocol.install: Bwts = max(cts, Mwts); Brts = max(Bwts+1, Mrts)
+    bwts = jnp.maximum(cts, mwts_ref[...])
+    brts = jnp.maximum(bwts + 1, mrts_ref[...])
+    hit_ref[...] = hit.astype(jnp.int32)
+    way_ref[...] = way
+    nwts_ref[...] = bwts
+    nrts_ref[...] = brts
+    ncts_ref[...] = jnp.maximum(cts, bwts)              # cts_after_write
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts, *, bn=256,
+                interpret=True):
+    """tag_rows/rts_rows: [N, W]; cts/addr/mwts/mrts: [N] (int32).
+
+    Returns (hit, way, new_wts, new_rts, new_cts), each [N] int32."""
+    N, W = tag_rows.shape
+    bn = min(bn, N)
+    while N % bn:
+        bn -= 1
+    grid = (N // bn,)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    outs = pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, W), row), pl.BlockSpec((bn, W), row),
+                  pl.BlockSpec((bn,), vec), pl.BlockSpec((bn,), vec),
+                  pl.BlockSpec((bn,), vec), pl.BlockSpec((bn,), vec)],
+        out_specs=[pl.BlockSpec((bn,), vec)] * 5,
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32)] * 5,
+        interpret=interpret,
+    )(tag_rows, rts_rows, cts, addr, mwts, mrts)
+    hit, way, nwts, nrts, ncts = outs
+    return hit.astype(bool), way, nwts, nrts, ncts

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas('tpu'|'interpret'|'off')`` selects the execution path: on real
+TPUs the kernels compile natively; on CPU they run in interpret mode (tests)
+or fall back to the jnp references (the dry-run lowering path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.lease_probe import lease_probe as _lease_probe
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.ssd_chunk import ssd_chunk as _ssd_chunk
+
+_MODE = "interpret"
+
+
+def use_pallas(mode: str):
+    """mode: 'tpu' | 'interpret' | 'off'."""
+    global _MODE
+    assert mode in ("tpu", "interpret", "off")
+    _MODE = mode
+
+
+def _interp() -> bool:
+    return _MODE != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    if _MODE == "off":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_interp(), **kw)
+
+
+def decode_attention(q, k, v, kv_len, **kw):
+    if _MODE == "off":
+        return ref.attention_ref(q, k, v, causal=False, kv_len=kv_len)
+    return _decode(q, k, v, kv_len, interpret=_interp(), **kw)
+
+
+def rmsnorm(x, w, *, eps=1e-6, **kw):
+    if _MODE == "off":
+        return ref.rmsnorm_ref(x, w, eps)
+    return _rmsnorm(x, w, eps=eps, interpret=_interp(), **kw)
+
+
+def ssd_chunk(x, dt, A, Bc, Cc, **kw):
+    return _ssd_chunk(x, dt, A, Bc, Cc, interpret=_interp(), **kw)
+
+
+def lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts, **kw):
+    if _MODE == "off":
+        return ref.lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts)
+    return _lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts,
+                        interpret=_interp(), **kw)

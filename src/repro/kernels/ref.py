@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_len=None):
+    """q: [B,Sq,Hq,D]; k,v: [B,Sk,Hkv,D] — plain softmax attention."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    qpk = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, qpk, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32)) * D ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.zeros((Sq, Sk), jnp.float32)
+    if causal:
+        mask = jnp.where(kpos > qpos, -1e30, mask)
+    if window:
+        mask = jnp.where(qpos - kpos >= window, -1e30, mask)
+    if kv_len is not None:
+        mask = jnp.where(kpos >= kv_len, -1e30, mask)
+    p = jax.nn.softmax(s + mask, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, Bc, Cc):
+    """Intra-chunk SSD reference for ONE chunk.
+
+    x: [Q,P]; dt: [Q]; A: scalar; Bc, Cc: [Q,N].
+    Returns (y_intra [Q,P], chunk_state [N,P], cum [Q])."""
+    dA = dt * A
+    cum = jnp.cumsum(dA)
+    li = cum[:, None] - cum[None, :]
+    L = jnp.exp(jnp.where(jnp.tril(jnp.ones_like(li, bool)), li, -jnp.inf))
+    cb = Cc.astype(jnp.float32) @ Bc.astype(jnp.float32).T      # [Q,Q]
+    scores = cb * L * dt[None, :]
+    y = scores @ x.astype(jnp.float32)
+    decay_out = jnp.exp(cum[-1] - cum)
+    state = (Bc.astype(jnp.float32) * (dt * decay_out)[:, None]).T \
+        @ x.astype(jnp.float32)                                  # [N,P]
+    return y.astype(x.dtype), state, cum
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts):
+    """HALCONE probe+install math (engine hot loop) over gathered set rows.
+
+    tag_rows/rts_rows: [N,W]; cts/addr/mwts/mrts: [N].
+    Returns (hit, way, new_wts, new_rts, new_cts)."""
+    eq = tag_rows == addr[:, None]
+    tag_hit = eq.any(-1)
+    way = jnp.argmax(eq, -1)
+    rts = jnp.take_along_axis(rts_rows, way[:, None], 1)[:, 0]
+    hit = tag_hit & protocol.valid(cts, rts)
+    lease = protocol.install(cts, mwts, mrts)
+    new_cts = protocol.cts_after_write(cts, lease.wts)
+    return hit, way, lease.wts, lease.rts, new_cts

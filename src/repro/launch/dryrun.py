@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production mesh and record memory/cost/collective analyses.
+
+MUST be executed as its own process (the XLA flag above has to land before
+jax initializes devices):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-130m \
+        --shape train_4k --mesh single
+
+Artifacts land in benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json and
+feed EXPERIMENTS.md §Dry-run / §Roofline via benchmarks/roofline.py.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs as cfgs
+from repro.launch import steps as S
+from repro.launch import hloanalysis as H
+from repro.launch import roofline as R
+from repro.launch.mesh import make_production_mesh
+from repro.models import applicable_shapes, model_spec
+from repro.models.config import SHAPES
+from repro.models.params import count_params, tree_paths
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token: total minus the routed experts' share."""
+    total = routed = 0
+    for path, p in tree_paths(model_spec(cfg)):
+        n = int(np.prod(p.shape))
+        total += n
+        if "/moe/w" in path:
+            routed += n
+    if cfg.n_experts:
+        frac = cfg.top_k / cfg.n_experts
+        return int(total - routed + routed * frac)
+    return total
+
+
+def mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                     # backend without support
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_mode: str, force=False,
+             variant: str = "base"):
+    sub = mesh_mode if variant == "base" else f"{mesh_mode}-{variant}"
+    out_path = ART / sub / f"{arch}__{shape_name}.json"
+    if out_path.exists() and not force:
+        print(f"[skip] {sub}/{arch}/{shape_name} (artifact exists)")
+        return json.loads(out_path.read_text())
+    cfg = cfgs.get(arch)
+    cell = {c.name: c for c in SHAPES}[shape_name]
+    if cell not in applicable_shapes(cfg):
+        print(f"[n/a ] {arch}/{shape_name} not applicable (DESIGN.md)")
+        return None
+    mesh = make_production_mesh(multi_pod=(mesh_mode == "multi"))
+    n_dev = mesh.devices.size
+    args_variant = variant if variant.startswith("lease") else "base"
+    fn, args, insh, outsh, donate = S.build_cell(cfg, cell, mesh, args_variant)
+
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=insh, out_shardings=outsh,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = dict(compiled.cost_analysis() or {})
+    mem = mem_analysis_dict(compiled)
+    hlo = compiled.as_text()
+
+    # cost_analysis() visits while bodies once -> useless under lax.scan;
+    # the static analyzer walks the call graph with trip multipliers.
+    hc = H.analyze(hlo, n_dev)
+    flops, hbm = hc.flops, hc.hbm_bytes
+    colls = {"per_kind": hc.coll_per_kind,
+             "per_group_size": {str(k): v
+                                for k, v in hc.coll_per_group.items()},
+             "total_wire_bytes": hc.wire_bytes,
+             "n_ops": hc.n_collectives,
+             "trips": hc.trips}
+    n_total = count_params(model_spec(cfg))
+    n_active = active_params(cfg)
+    mf = R.model_flops_for(cfg, cell, n_total, n_active)
+    rl = R.roofline_terms(flops, hbm, colls["total_wire_bytes"], mf, n_dev)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_mode,
+        "variant": variant,
+        "n_devices": n_dev, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "params_total": n_total, "params_active": n_active,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if np.isscalar(v)},
+        "memory_analysis": mem,
+        "collectives": colls,
+        "roofline": {
+            "flops_per_dev": rl.flops, "hbm_bytes_per_dev": rl.hbm_bytes,
+            "wire_bytes_per_dev": rl.wire_bytes,
+            "t_compute_s": rl.t_compute, "t_memory_s": rl.t_memory,
+            "t_collective_s": rl.t_collective, "bottleneck": rl.bottleneck,
+            "model_flops_per_dev": rl.model_flops,
+            "useful_flop_ratio": rl.useful_ratio,
+        },
+    }
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    print(f"[ ok ] {sub}/{arch}/{shape_name}: compile {t_compile:.1f}s "
+          f"flops/dev={flops:.3e} hbm/dev={hbm:.3e} "
+          f"wire/dev={colls['total_wire_bytes']:.3e} "
+          f"bottleneck={rl.bottleneck}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    archs = list(cfgs.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = ([c.name for c in SHAPES] if args.shape == "all"
+              else [args.shape])
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for mesh_mode in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_cell(arch, shape, mesh_mode, force=args.force,
+                             variant=args.variant)
+                except Exception:
+                    failures.append((mesh_mode, arch, shape))
+                    print(f"[FAIL] {mesh_mode}/{arch}/{shape}")
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

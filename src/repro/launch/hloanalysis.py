@@ -1,0 +1,285 @@
+"""Static analyzer for post-optimization HLO text.
+
+Why: ``compiled.cost_analysis()`` visits each while-loop body ONCE, so any
+model whose layers run under ``lax.scan`` under-reports FLOPs / bytes /
+collective traffic by the trip count.  This walks the call graph with loop
+multipliers instead:
+
+  flops      — 2*M*N*K per dot (batch dims included), x loop trips
+  hbm bytes  — operand+result bytes at fusion/op boundaries (XLA's fusion
+               boundary is the HBM traffic boundary), x loop trips
+  wire bytes — per-collective ring-model bytes (roofline.py), x loop trips
+
+Trip counts: scan lowers to while(tuple(...)); the condition compares a
+get-tuple-element (counter) against another (bound); we trace the bound back
+to its constant through the while's init tuple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.roofline import _DTYPE_BYTES, _group_size, _wire_bytes
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],{}\s/*]+?)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_GTE_IDX = re.compile(r"index=(\d+)")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "add-dependency", "while",
+               "conditional", "call", "partition-id", "replica-id",
+               "get-dimension-size", "domain", "opt-barrier"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast",
+                "all-gather-start", "all-reduce-start",
+                "collective-permute-start", "all-to-all-start"}
+
+
+def _shape_elems(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_elems(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                 # operands + attrs tail
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    by_name: Dict[str, Op]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if hdr and ("->" in line):
+            nm = hdr.group(1).lstrip("%")
+            cur = Computation(nm, [], {})
+            comps[nm] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = nm
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2).strip(), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    result_n = 1
+    for _, dims in _shape_elems(op.type_str):
+        for d in dims:
+            result_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if not m:
+        return 2.0 * result_n
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    opnds = _OPERAND_RE.findall(op.rest.split(", lhs_contracting")[0])
+    k = 1
+    if opnds:
+        lhs = comp.by_name.get(opnds[0])
+        if lhs is not None:
+            els = _shape_elems(lhs.type_str)
+            if els:
+                dims = els[0][1]
+                for c in cdims:
+                    if c < len(dims):
+                        k *= dims[c]
+    return 2.0 * result_n * k
+
+
+def _trip_count(comps, comp: Computation, op: Op) -> int:
+    """Trace scan trip count: cond ROOT compare(gte_i, gte_j) -> init tuple."""
+    mc = re.search(r"condition=(%[\w.\-]+)", op.rest)
+    if not mc:
+        return 1
+    cond = comps.get(mc.group(1).lstrip("%"))
+    if cond is None:
+        return 1
+    root = cond.ops[-1] if cond.ops else None
+    for o in cond.ops:
+        if o.opcode == "compare" and "direction=LT" in o.rest:
+            root = o
+            break
+    if root is None or root.opcode != "compare":
+        # fallback: largest constant in the condition computation
+        consts = [int(c) for o in cond.ops for c in _CONST_RE.findall(
+            o.opcode + "(" + o.rest)]
+        return max(consts) if consts else 1
+    sides = _OPERAND_RE.findall(root.rest)[:2]
+    idxs = []
+    for s in sides:
+        d = cond.by_name.get(s)
+        if d is not None and d.opcode == "get-tuple-element":
+            mi = _GTE_IDX.search(d.rest)
+            if mi:
+                idxs.append(int(mi.group(1)))
+        elif d is not None and d.opcode == "constant":
+            mi = _CONST_RE.search("constant(" + d.rest)
+            if mi:
+                return max(1, int(mi.group(1)))
+    if not idxs:
+        return 1
+    # find the while's init tuple in the parent computation
+    parent = None
+    for c in comps.values():
+        if op.name in c.by_name and c.by_name[op.name] is op:
+            parent = c
+            break
+    if parent is None:
+        return 1
+    init_ref = _OPERAND_RE.findall(op.rest)
+    init = parent.by_name.get(init_ref[0]) if init_ref else None
+    if init is None or init.opcode != "tuple":
+        return 1
+    elems = _OPERAND_RE.findall(init.rest)
+    vals = []
+    for j in idxs:
+        if j < len(elems):
+            d = parent.by_name.get(elems[j])
+            if d is not None and d.opcode == "constant":
+                mi = _CONST_RE.search("constant(" + d.rest)
+                if mi:
+                    vals.append(int(mi.group(1)))
+    return max([v for v in vals if v > 0], default=1)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_per_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_per_group: Dict[int, float] = dataclasses.field(default_factory=dict)
+    n_collectives: int = 0
+    trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.coll_per_kind.items():
+            self.coll_per_kind[k] = self.coll_per_kind.get(k, 0.0) + v * mult
+        for k, v in other.coll_per_group.items():
+            self.coll_per_group[k] = self.coll_per_group.get(k, 0.0) + v * mult
+        self.n_collectives += int(other.n_collectives * mult)
+        self.trips.update(other.trips)
+
+
+def _called(op: Op, attr: str) -> Optional[str]:
+    m = re.search(attr + r"=(%[\w.\-]+)", op.rest)
+    return m.group(1).lstrip("%") if m else None
+
+
+def analyze(text: str, n_devices: int) -> Cost:
+    comps, entry = parse_module(text)
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, fusion_internal: bool) -> Cost:
+        key = (name, fusion_internal)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()                       # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        c = Cost()
+        for op in comp.ops:
+            if op.opcode == "dot" or op.opcode.endswith("convolution"):
+                c.flops += _dot_flops(op, comp)
+                if not fusion_internal:
+                    c.hbm_bytes += _op_bytes(op, comp)
+            elif op.opcode == "fusion":
+                callee = _called(op, "calls")
+                if callee:
+                    c.add(comp_cost(callee, True))
+                if not fusion_internal:
+                    c.hbm_bytes += _op_bytes(op, comp)
+            elif op.opcode == "while":
+                body = _called(op, "body")
+                cond = _called(op, "condition")
+                trips = _trip_count(comps, comp, op)
+                c.trips[op.name] = trips
+                if body:
+                    c.add(comp_cost(body, fusion_internal), trips)
+                if cond:
+                    c.add(comp_cost(cond, fusion_internal), trips)
+            elif op.opcode == "conditional":
+                for br in re.findall(r"branch_computations=\{([^}]*)\}",
+                                     op.rest):
+                    for nm in _OPERAND_RE.findall(br):
+                        c.add(comp_cost(nm.lstrip("%"), fusion_internal))
+                tc = _called(op, "true_computation")
+                fc = _called(op, "false_computation")
+                for nm in (tc, fc):
+                    if nm:
+                        c.add(comp_cost(nm, fusion_internal))
+            elif op.opcode == "call":
+                callee = _called(op, "to_apply")
+                if callee:
+                    c.add(comp_cost(callee, fusion_internal))
+            elif op.opcode.replace("-start", "").replace("-done", "") in (
+                    "all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute",
+                    "collective-broadcast"):
+                if op.opcode.endswith("-done"):
+                    continue
+                kind = op.opcode.replace("-start", "")
+                rb = _type_bytes(op.type_str)
+                n = _group_size(op.opcode + "(" + op.rest, n_devices)
+                wb = _wire_bytes(kind, rb, n)
+                c.wire_bytes += wb
+                c.coll_per_kind[kind] = c.coll_per_kind.get(kind, 0.0) + wb
+                c.coll_per_group[n] = c.coll_per_group.get(n, 0.0) + wb
+                c.n_collectives += 1
+                if not fusion_internal:
+                    c.hbm_bytes += _op_bytes(op, comp)
+            else:
+                if not fusion_internal and op.opcode not in _SKIP_BYTES:
+                    c.hbm_bytes += _op_bytes(op, comp)
+        memo[key] = c
+        return c
+
+    def _op_bytes(op: Op, comp: Computation) -> float:
+        total = float(_type_bytes(op.type_str))
+        head = op.rest.split("), ")[0]
+        for ref in _OPERAND_RE.findall(head):
+            d = comp.by_name.get(ref)
+            if d is not None and d.opcode not in ("constant",):
+                total += _type_bytes(d.type_str)
+        return total
+
+    return comp_cost(entry, False)

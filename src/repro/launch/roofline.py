@@ -1,0 +1,140 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+memory term     = HLO_bytes / (chips x HBM bw)
+collective term = wire bytes / (chips x link bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device, post-SPMD).
+Collective bytes are NOT in cost_analysis: we parse ``compiled.as_text()`` and
+sum wire bytes for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with ring-algorithm factors per op kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+# TPU v5e-class chip constants (per the brief)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (per-chip injection, 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\[[\d,]+\]<=\[\d+\])")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    dims = [int(x) for x in g[1:g.index("]")].split(",")]
+    total = int(g[g.index("<=[") + 3:-1])
+    n_groups = dims[0] if len(dims) > 1 else 1
+    return max(1, total // max(n_groups, 1)) if len(dims) > 1 else dims[0]
+
+
+def _wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    """Per-device wire bytes under ring algorithms."""
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    if kind == "all-gather":
+        return result_bytes * f                  # result = gathered buffer
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * f            # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)            # result = scattered shard
+    if kind == "all-to-all":
+        return result_bytes * f
+    return float(result_bytes)                   # permute / broadcast
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> Dict:
+    per_kind: Dict[str, float] = {}
+    ops: List[dict] = []
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:        # async pair: count only the start
+            continue
+        rb = _shape_bytes(type_str)
+        n = _group_size(line, n_devices)
+        wb = _wire_bytes(kind, rb, n)
+        per_kind[kind] = per_kind.get(kind, 0.0) + wb
+        ops.append({"kind": kind, "result_bytes": rb, "group": n,
+                    "wire_bytes": wb})
+    return {"per_kind": per_kind,
+            "total_wire_bytes": sum(per_kind.values()),
+            "n_ops": len(ops),
+            "largest": sorted(ops, key=lambda o: -o["wire_bytes"])[:12]}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    wire_bytes: float             # per device
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0      # 6*N*D (or 6*N_active*D)
+    useful_ratio: float = 0.0
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   model_flops_global: float = 0.0,
+                   n_devices: int = 1) -> Roofline:
+    tc = flops / PEAK_FLOPS
+    tm = hbm_bytes / HBM_BW
+    tx = wire_bytes / ICI_BW
+    terms = {"compute": tc, "memory": tm, "collective": tx}
+    bn = max(terms, key=terms.get)
+    mf = model_flops_global / max(n_devices, 1)
+    return Roofline(flops=flops, hbm_bytes=hbm_bytes, wire_bytes=wire_bytes,
+                    t_compute=tc, t_memory=tm, t_collective=tx, bottleneck=bn,
+                    model_flops=mf,
+                    useful_ratio=(mf / flops if flops else 0.0))
+
+
+def model_flops_for(cfg, cell, n_params_total: int, n_params_active: int) -> float:
+    """6*N*D for a train step (fwd+bwd), 2*N*D for inference, per the usual
+    transformer accounting; D = tokens processed this step."""
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_params_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_params_active * tokens
+    tokens = cell.global_batch                      # one token per sequence
+    return 2.0 * n_params_active * tokens

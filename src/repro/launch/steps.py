@@ -1,0 +1,161 @@
+"""Jittable step functions (train / prefill / decode) + their shardings and
+abstract input specs for every (arch x shape) dry-run cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models import config as mcfg
+from repro.models import model as M
+from repro.models.params import abstract, shardings
+from repro.optim import adamw
+from repro.sharding import ShardCtx, named_sharding
+
+
+# ------------------------------------------------------------------ specs
+def batch_abstract(cfg: mcfg.ModelConfig, cell: mcfg.ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.frontend == "audio":
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_frontend),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patch_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_shardings(cfg: mcfg.ModelConfig, cell: mcfg.ShapeCell, mesh):
+    ab = batch_abstract(cfg, cell)
+    ax = {"tokens": ("batch", None), "labels": ("batch", None),
+          "frames": ("batch", None, None), "patches": ("batch", None, None)}
+    return {k: named_sharding(mesh, v.shape, ax[k]) for k, v in ab.items()}
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# ------------------------------------------------------------------ train
+def make_train_step(cfg: mcfg.ModelConfig, mesh,
+                    opt: adamw.AdamWConfig = adamw.AdamWConfig()):
+    ctx = ShardCtx(mesh)
+
+    def train_step(state: adamw.TrainState, batch):
+        def lf(params):
+            loss, metrics = M.loss_fn(cfg, params, batch, ctx)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state.params)
+        new_state = adamw.apply_updates(opt, state, grads)
+        return new_state, {**metrics, "loss": loss,
+                           "gnorm": adamw.global_norm(grads)}
+
+    return train_step
+
+
+def train_arguments(cfg: mcfg.ModelConfig, cell: mcfg.ShapeCell, mesh):
+    """(abstract_args, in_shardings, out_shardings) for the train step."""
+    spec = M.model_spec(cfg)
+    params = abstract(spec, cfg.policy.param_dtype)
+    state = adamw.abstract_state(params, cfg.policy.moment_dtype)
+    psh = shardings(spec, mesh, cfg.policy.param_dtype)
+    ssh = adamw.state_shardings(psh, mesh)
+    bsh = batch_shardings(cfg, cell, mesh)
+    metr_sh = {k: _replicated(mesh)
+               for k in ("ce", "aux", "loss", "gnorm")}
+    return ((state, batch_abstract(cfg, cell)), (ssh, bsh), (ssh, metr_sh))
+
+
+# ------------------------------------------------------------------ serve
+SERVE_DTYPE = jnp.bfloat16
+
+
+def make_prefill_step(cfg: mcfg.ModelConfig, mesh):
+    ctx = ShardCtx(mesh)
+
+    def prefill_step(params, cache, batch):
+        return M.prefill(cfg, params, batch.get("tokens"), cache,
+                         patches=batch.get("patches"),
+                         frames=batch.get("frames"), ctx=ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: mcfg.ModelConfig, mesh):
+    ctx = ShardCtx(mesh)
+
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos, ctx=ctx)
+
+    return decode_step
+
+
+def serve_params(cfg: mcfg.ModelConfig, mesh):
+    spec = M.model_spec(cfg)
+    return abstract(spec, SERVE_DTYPE), shardings(spec, mesh, SERVE_DTYPE)
+
+
+def serve_arguments(cfg: mcfg.ModelConfig, cell: mcfg.ShapeCell, mesh):
+    """Abstract args + shardings for prefill (kind='prefill') or decode."""
+    B, S = cell.global_batch, cell.seq_len
+    params, psh = serve_params(cfg, mesh)
+    cache = M.abstract_cache(cfg, B, S)
+    csh = shardings(M.cache_spec(cfg, B, S), mesh, cfg.policy.cache_dtype)
+    ids_sh = named_sharding(mesh, (B,), ("batch",))
+    if cell.kind == "prefill":
+        batch = batch_abstract(cfg, cell)
+        bsh = batch_shardings(cfg, cell, mesh)
+        return ((params, cache, batch), (psh, csh, bsh), (ids_sh, csh))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tsh = named_sharding(mesh, (B, 1), ("batch", None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return ((params, cache, tokens, pos),
+            (psh, csh, tsh, _replicated(mesh)),
+            (ids_sh, csh))
+
+
+def lease_arguments(cfg: mcfg.ModelConfig, cell: mcfg.ShapeCell, mesh, W: int):
+    """Args/shardings for the cross-pod lease-sync window (variant leaseW)."""
+    from repro.sharding import named_sharding
+    spec = M.model_spec(cfg)
+    params = abstract(spec, cfg.policy.param_dtype)
+    state = adamw.abstract_state(params, cfg.policy.moment_dtype)
+    psh = shardings(spec, mesh, cfg.policy.param_dtype)
+    ssh = adamw.state_shardings(psh, mesh)
+    ab = batch_abstract(cfg, cell)
+    batches = {k: jax.ShapeDtypeStruct((W,) + v.shape, v.dtype)
+               for k, v in ab.items()}
+    ax = {"tokens": (None, "batch", None), "labels": (None, "batch", None),
+          "frames": (None, "batch", None, None),
+          "patches": (None, "batch", None, None)}
+    bsh = {k: named_sharding(mesh, v.shape, ax[k])
+           for k, v in batches.items()}
+    return ((state, batches), (ssh, bsh), (ssh, _replicated(mesh)))
+
+
+def build_cell(cfg: mcfg.ModelConfig, cell: mcfg.ShapeCell, mesh,
+               variant: str = "base"):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, donate)."""
+    if variant.startswith("lease") and cell.kind == "train":
+        from repro.coherence.lease_sync import LeaseConfig, make_lease_window_step
+        from repro.optim import adamw as _adamw
+        W = int(variant[len("lease"):] or 4)
+        fn = make_lease_window_step(cfg, mesh, _adamw.AdamWConfig(),
+                                    LeaseConfig(wr_lease=W))
+        args, insh, outsh = lease_arguments(cfg, cell, mesh, W)
+        return fn, args, insh, outsh, (0,)
+    if cell.kind == "train":
+        fn = make_train_step(cfg, mesh)
+        args, insh, outsh = train_arguments(cfg, cell, mesh)
+        return fn, args, insh, outsh, (0,)
+    if cell.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh)
+        args, insh, outsh = serve_arguments(cfg, cell, mesh)
+        return fn, args, insh, outsh, (1,)
+    fn = make_decode_step(cfg, mesh)
+    args, insh, outsh = serve_arguments(cfg, cell, mesh)
+    return fn, args, insh, outsh, (1,)

@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig, Policy, ShapeCell, SHAPES, applicable_shapes  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    abstract_cache, abstract_model, cache_spec, decode_step, forward,
+    init_cache, init_model, loss_fn, model_shardings, model_spec, prefill,
+)

@@ -1,0 +1,168 @@
+"""Attention blocks: dense GQA (optional QKV bias, sliding window) and MLA
+(DeepSeek-V2 multi-head latent attention with compressed KV cache)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, attention, rmsnorm, update_cache
+from repro.models.params import P
+
+
+# ---------------------------------------------------------------- dense GQA
+def gqa_spec(cfg: ModelConfig) -> dict:
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = {
+        "wq": P((D, Hq * Dh), ("embed", "heads")),
+        "wk": P((D, Hkv * Dh), ("embed", "heads")),
+        "wv": P((D, Hkv * Dh), ("embed", "heads")),
+        "wo": P((Hq * Dh, D), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((Hq * Dh,), ("heads",), "zeros")
+        s["bk"] = P((Hkv * Dh,), ("heads",), "zeros")
+        s["bv"] = P((Hkv * Dh,), ("heads",), "zeros")
+    return s
+
+
+def gqa_apply(cfg: ModelConfig, p: dict, h, *, positions, cache=None, pos=None,
+              window: int = 0, ctx=None):
+    """h: [B, S, D].  Returns (out, new_cache)."""
+    B, S, D = h.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    cd = h.dtype
+
+    def proj(w, b):
+        y = h @ p[w].astype(cd)
+        if cfg.qkv_bias:
+            y = y + p[b].astype(cd)
+        return y
+
+    q = proj("wq", "bq").reshape(B, S, Hq, Dh)
+    k = proj("wk", "bk").reshape(B, S, Hkv, Dh)
+    v = proj("wv", "bv")                                  # flat [B, S, Hkv*Dh]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta).reshape(B, S, Hkv * Dh)
+    # NOTE §Perf: forcing an SP->TP head-shard boundary here was tried and
+    # REFUTED for GQA (qwen110 wire 3.1e12 -> 1.8e13: Shardy already head-
+    # shards dense GQA, the constraint only added seq re-gathers).  It is a
+    # confirmed 2.5x win for MLA (below), where heads were left replicated.
+
+    new_cache = None
+    if cache is not None:
+        start = pos if pos is not None else 0
+        ck = update_cache(cache["k"], k, start)
+        cv = update_cache(cache["v"], v, start)
+        new_cache = {"k": ck, "v": cv}
+    if pos is not None:                                   # decode: attend to cache
+        kk = new_cache["k"].astype(cd).reshape(B, -1, Hkv, Dh)
+        vv = new_cache["v"].astype(cd).reshape(B, -1, Hkv, Dh)
+        out = attention(q, kk, vv, causal=False, window=window,
+                        q_offset=0, kv_len=pos + S, chunk=cfg.attn_chunk)
+    else:
+        out = attention(q, k.reshape(B, S, Hkv, Dh), v.reshape(B, S, Hkv, Dh),
+                        causal=cfg.causal, window=window, chunk=cfg.attn_chunk)
+    return out.reshape(B, S, Hq * Dh) @ p["wo"].astype(cd), new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int, seq_axis: str):
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": P((batch, max_len, Hkv * Dh), ("batch", seq_axis, "heads"), "zeros"),
+        "v": P((batch, max_len, Hkv * Dh), ("batch", seq_axis, "heads"), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------- MLA
+def mla_spec(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    s = {
+        "wkv_a": P((D, cfg.kv_lora + rope_d), ("embed", None)),
+        "kv_ln": P((cfg.kv_lora,), (None,), "zeros"),
+        "wk_b": P((cfg.kv_lora, H * nope), (None, "heads")),
+        "wv_b": P((cfg.kv_lora, H * vd), (None, "heads")),
+        "wo": P((H * vd, D), ("heads", "embed")),
+    }
+    if cfg.q_lora:
+        s["wq_a"] = P((D, cfg.q_lora), ("embed", None))
+        s["q_ln"] = P((cfg.q_lora,), (None,), "zeros")
+        s["wq_b"] = P((cfg.q_lora, H * (nope + rope_d)), (None, "heads"))
+    else:
+        s["wq"] = P((D, H * (nope + rope_d)), ("embed", "heads"))
+    return s
+
+
+def mla_apply(cfg: ModelConfig, p: dict, h, *, positions, cache=None, pos=None,
+              window: int = 0, ctx=None):
+    B, S, D = h.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    cd = h.dtype
+
+    if cfg.q_lora:
+        qa = rmsnorm(h @ p["wq_a"].astype(cd), p["q_ln"], cfg.rms_eps)
+        q = (qa @ p["wq_b"].astype(cd)).reshape(B, S, H, nope + rope_d)
+    else:
+        q = (h @ p["wq"].astype(cd)).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if ctx is not None:
+        q = ctx.constrain(q, "batch", None, "heads", None)
+    kv = h @ p["wkv_a"].astype(cd)                        # [B,S,kv_lora+rope_d]
+    latent = rmsnorm(kv[..., :cfg.kv_lora], p["kv_ln"], cfg.rms_eps)
+    k_rope = apply_rope(kv[..., cfg.kv_lora:][..., None, :],
+                        positions, cfg.rope_theta)[..., 0, :]
+    ckv = jnp.concatenate([latent, k_rope], axis=-1)      # cached form
+
+    new_cache = None
+    if cache is not None:
+        start = pos if pos is not None else 0
+        new_cache = {"ckv": update_cache(cache["ckv"], ckv, start)}
+    src = new_cache["ckv"].astype(cd) if pos is not None else ckv
+    T = src.shape[1]
+    lat, kr = src[..., :cfg.kv_lora], src[..., cfg.kv_lora:]
+    scale = (nope + rope_d) ** -0.5
+
+    if pos is not None and cfg.mla_absorb:
+        # §Perf: DeepSeek's weight-absorption decode.  Instead of up-
+        # projecting the WHOLE cache to per-head K/V (T*kv_lora*H*(nope+vd)
+        # MACs per step!), fold W_uk into q and W_uv into the output, so
+        # attention runs directly in the compressed latent space.
+        wk_b = p["wk_b"].astype(cd).reshape(cfg.kv_lora, H, nope)
+        q_lat = jnp.einsum("bshn,lhn->bshl", q[..., :nope], wk_b)  # [B,S,H,L]
+        s_nope = jnp.einsum("bshl,btl->bhst", q_lat, lat)
+        s_rope = jnp.einsum("bshr,btr->bhst", q[..., nope:], kr)
+        s = (s_nope + s_rope).astype(jnp.float32) * scale
+        kpos = jnp.arange(T)
+        s = jnp.where(kpos[None, None, None, :] >= pos + S, -1e30, s)
+        w = jax.nn.softmax(s, axis=-1).astype(cd)
+        ctx_lat = jnp.einsum("bhst,btl->bshl", w, lat)             # [B,S,H,L]
+        wv_b = p["wv_b"].astype(cd).reshape(cfg.kv_lora, H, vd)
+        out = jnp.einsum("bshl,lhv->bshv", ctx_lat, wv_b)
+        return out.reshape(B, S, H * vd) @ p["wo"].astype(cd), new_cache
+
+    k_nope = (lat @ p["wk_b"].astype(cd)).reshape(B, T, H, nope)
+    v = (lat @ p["wv_b"].astype(cd)).reshape(B, T, H, vd)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[..., None, :],
+                                                  (B, T, H, rope_d))], axis=-1)
+    if ctx is not None:
+        k = ctx.constrain(k, "batch", None, "heads", None)
+        v = ctx.constrain(v, "batch", None, "heads", None)
+    if pos is not None:
+        out = attention(q, k, v, causal=False, window=window, kv_len=pos + S,
+                        chunk=cfg.attn_chunk, softmax_scale=scale)
+    else:
+        out = attention(q, k, v, causal=cfg.causal, window=window,
+                        chunk=cfg.attn_chunk, softmax_scale=scale)
+    return out.reshape(B, S, H * vd) @ p["wo"].astype(cd), new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int, seq_axis: str):
+    return {"ckv": P((batch, max_len, cfg.kv_lora + cfg.rope_head_dim),
+                     ("batch", seq_axis, "heads"), "zeros")}

@@ -1,0 +1,132 @@
+"""Core layer primitives: RMSNorm, RoPE, memory-efficient attention, chunked CE.
+
+Everything is pure jnp (the XLA path used for dry-run lowering); Pallas kernels in
+``repro.kernels`` provide drop-in TPU implementations validated against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [..., S, H, D]; positions: [..., S] or [S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int, kv_len: Optional[int]):
+    """[Sq, Sk] additive bias in f32."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], _NEG_INF, m)
+    if window:
+        m = jnp.where(q_pos[:, None] - k_pos[None, :] >= window, _NEG_INF, m)
+    if kv_len is not None:   # decode: cache positions beyond filled length
+        m = jnp.where(k_pos[None, :] >= kv_len, _NEG_INF, m)
+    return m
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None,
+              chunk=1024, softmax_scale=None):
+    """Memory-efficient GQA attention.
+
+    q: [B, Sq, Hq, D]; k, v: [B, Sk, Hkv, D].  Scans over q chunks so the live
+    score buffer is [B, Hkv, qpk, chunk, Sk] instead of [.., Sq, Sk].
+    q_offset: absolute position of q[0] (prefill=0; decode=pos).
+    kv_len: number of valid cache entries (decode), None for train/prefill.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    qpk = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qr = q.reshape(B, Sq, Hkv, qpk, D)
+    k_pos = jnp.arange(Sk)
+
+    def block(q_blk, qpos_blk):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(qpos_blk, k_pos, causal, window, kv_len)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", p, v,
+                          preferred_element_type=jnp.float32)
+
+    if Sq <= chunk:
+        out = block(qr, q_offset + jnp.arange(Sq))
+    else:
+        n = Sq // chunk
+        assert Sq % chunk == 0, (Sq, chunk)
+        qs = qr.reshape(B, n, chunk, Hkv, qpk, D).transpose(1, 0, 2, 3, 4, 5)
+        pos = (q_offset + jnp.arange(Sq)).reshape(n, chunk)
+
+        def body(_, xs):
+            qb, pb = xs
+            return None, block(qb, pb)
+
+        _, out = jax.lax.scan(body, None, (qs, pos))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, qpk, Dv)
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def swiglu(x, wg, wi, wo, compute_dtype):
+    g = x @ wg.astype(compute_dtype)
+    u = x @ wi.astype(compute_dtype)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u) @ wo.astype(compute_dtype)
+
+
+def chunked_xent(h, unembed, labels, mask=None, chunk=512):
+    """Next-token CE without materializing [B, S, V] logits.
+
+    h: [B, S, D] (already shifted so h[t] predicts labels[t]);
+    unembed: [D, V]; labels: [B, S] int32; mask: [B, S] or None.
+    """
+    B, S, D = h.shape
+    V = unembed.shape[-1]
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    hs = h.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = (mask.reshape(B, n, chunk).transpose(1, 0, 2)
+          if mask is not None else jnp.ones_like(ls, jnp.float32))
+
+    def body(carry, xs):
+        hb, lb, mb = xs
+        logits = (hb @ unembed.astype(hb.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        loss = (lse - tgt) * mb
+        return (carry[0] + loss.sum(), carry[1] + mb.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def update_cache(cache_kv, new_kv, pos):
+    """cache_kv: [B, S_max, F]; new_kv: [B, s, F]; pos: scalar start index."""
+    return jax.lax.dynamic_update_slice(cache_kv, new_kv.astype(cache_kv.dtype),
+                                        (0, pos, 0))

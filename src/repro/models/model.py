@@ -1,0 +1,330 @@
+"""Model assembly for all 10 architectures.
+
+A config is compiled into a *plan*: an optional prefix of looped layers plus a
+``lax.scan`` over stacked pattern-repeats (so HLO size / compile time are
+independent of depth: qwen1.5-110b's 80 layers scan as cheaply as mamba2's 24).
+Heterogeneous stacks (gemma3 5-local:1-global, llama4 dense/MoE interleave,
+zamba2 mamba+shared-attn) scan over multi-layer pattern bodies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import chunked_xent, rmsnorm, swiglu
+from repro.models.params import P, abstract, materialize, shardings, stack_specs
+from repro.sharding import NOSHARD, ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    kind: str          # dense | moe | ssm | attn_shared
+    window: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    mode: str                      # "scan" | "loop"
+    pattern: Tuple[LayerDesc, ...]
+    repeats: int                   # scan: >=1; loop: always 1
+
+
+def build_plan(cfg: ModelConfig) -> List[Segment]:
+    descs = [LayerDesc(cfg.layer_kind(i), cfg.attn_window(i))
+             for i in range(cfg.n_layers)]
+    prefix = cfg.first_dense
+    segs: List[Segment] = []
+    if prefix:
+        segs.append(Segment("loop", tuple(descs[:prefix]), 1))
+    rest = descs[prefix:]
+    n = len(rest)
+    period = n
+    for p in range(1, min(16, n) + 1):
+        reps = n // p
+        if reps >= 2 and all(rest[i] == rest[i % p] for i in range(p * reps)):
+            period = p
+            break
+    reps = n // period
+    if reps >= 2:
+        segs.append(Segment("scan", tuple(rest[:period]), reps))
+        rem = rest[period * reps:]
+        if rem:
+            segs.append(Segment("loop", tuple(rem), 1))
+    elif n:
+        segs.append(Segment("loop", tuple(rest), 1))
+    return segs
+
+
+# ------------------------------------------------------------------ specs
+def _attn_spec(cfg):
+    return attn_mod.mla_spec(cfg) if cfg.is_mla else attn_mod.gqa_spec(cfg)
+
+
+def block_spec(cfg: ModelConfig, desc: LayerDesc) -> dict:
+    D = cfg.d_model
+    ln = lambda: P((D,), (None,), "zeros")
+    if desc.kind == "ssm":
+        return {"ln": ln(), "ssm": ssm_mod.ssm_spec(cfg)}
+    if desc.kind == "attn_shared":
+        return {}                                     # weights live at top level
+    s = {"ln1": ln(), "attn": _attn_spec(cfg), "ln2": ln()}
+    if desc.kind == "moe":
+        s["moe"] = moe_mod.moe_spec(cfg)
+    else:
+        s["mlp"] = {
+            "wg": P((D, cfg.d_ff), ("embed", "mlp")),
+            "wi": P((D, cfg.d_ff), ("embed", "mlp")),
+            "wo": P((cfg.d_ff, D), ("mlp", "embed")),
+        }
+    return s
+
+
+def shared_block_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "ln1": P((D,), (None,), "zeros"),
+        "attn": _attn_spec(cfg),
+        "ln2": P((D,), (None,), "zeros"),
+        "mlp": {
+            "wg": P((D, cfg.d_ff), ("embed", "mlp")),
+            "wi": P((D, cfg.d_ff), ("embed", "mlp")),
+            "wo": P((cfg.d_ff, D), ("mlp", "embed")),
+        },
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab
+    spec: dict = {"embed": P((V, D), ("vocab", "embed"))}
+    if cfg.frontend == "audio":
+        spec["frontend"] = P((cfg.d_frontend, D), (None, "embed"))
+    segs = build_plan(cfg)
+    seg_specs = {}
+    for si, seg in enumerate(segs):
+        body = {str(j): block_spec(cfg, d) for j, d in enumerate(seg.pattern)}
+        if seg.mode == "scan":
+            body = stack_specs(body, seg.repeats)
+        seg_specs[f"seg{si}"] = body
+    spec["segments"] = seg_specs
+    if any(d.kind == "attn_shared" for s in segs for d in s.pattern):
+        spec["shared_attn"] = shared_block_spec(cfg)
+    spec["ln_f"] = P((D,), (None,), "zeros")
+    if not cfg.tie_embeddings:
+        spec["unembed"] = P((D, V), ("embed", "vocab"))
+    return spec
+
+
+# ------------------------------------------------------------------ caches
+def block_cache_spec(cfg: ModelConfig, desc: LayerDesc, batch: int,
+                     max_len: int, seq_axis: str) -> dict:
+    if desc.kind == "ssm":
+        return ssm_mod.ssm_cache_spec(cfg, batch)
+    if cfg.is_mla:
+        return attn_mod.mla_cache_spec(cfg, batch, max_len, seq_axis)
+    return attn_mod.gqa_cache_spec(cfg, batch, max_len, seq_axis)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    # long-context (batch==1): shard the KV sequence dim over "data"
+    seq_axis = "kv_seq" if batch == 1 else "seq"
+    segs = build_plan(cfg)
+    out = {}
+    for si, seg in enumerate(segs):
+        body = {str(j): block_cache_spec(cfg, d, batch, max_len, seq_axis)
+                for j, d in enumerate(seg.pattern)}
+        if seg.mode == "scan":
+            body = stack_specs(body, seg.repeats)
+        out[f"seg{si}"] = body
+    return out
+
+
+# ------------------------------------------------------------------ forward
+def _constrain_params(bp, specs, ctx: ShardCtx, compute_dtype):
+    """Per-layer slice of scanned params: constrain + cast to compute dtype.
+    Float >=2D weights are cast (halves FSDP all-gather bytes); norm scales
+    and 1D biases stay in param dtype for numerics."""
+    def leaf(x, spec: P):
+        # cast FIRST so the FSDP all-gather and the gradient reduction both
+        # move compute-dtype (bf16) bytes, then pin the sharding on the
+        # casted value (its cotangent inherits the constraint)
+        y = x
+        if x.ndim >= 2 and jnp.issubdtype(x.dtype, jnp.floating):
+            y = y.astype(compute_dtype)
+        return ctx.constrain(y, *spec.axes)
+
+    return jax.tree.map(leaf, bp, specs)
+
+
+def _apply_block(cfg: ModelConfig, desc: LayerDesc, bp: dict, h, *,
+                 positions, cache, pos, shared_attn, ctx: ShardCtx):
+    aux = jnp.zeros((), jnp.float32)
+    if desc.kind == "ssm":
+        y, nc = ssm_mod.ssm_apply(cfg, bp["ssm"],
+                                  rmsnorm(h, bp["ln"], cfg.rms_eps),
+                                  cache=cache, ctx=ctx)
+        return ctx.constrain(h + y, "batch", "seq_shard", None), nc, aux
+    p = shared_attn if desc.kind == "attn_shared" else bp
+    apply_fn = attn_mod.mla_apply if cfg.is_mla else attn_mod.gqa_apply
+    a, nc = apply_fn(cfg, p["attn"], rmsnorm(h, p["ln1"], cfg.rms_eps),
+                     positions=positions, cache=cache, pos=pos,
+                     window=desc.window, ctx=ctx)
+    h = ctx.constrain(h + a, "batch", "seq_shard", None)
+    hn = rmsnorm(h, p["ln2"], cfg.rms_eps)
+    if desc.kind == "moe":
+        m, aux = moe_mod.moe_apply(cfg, bp["moe"], hn, ctx)
+    else:
+        m = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"], h.dtype)
+    return ctx.constrain(h + m, "batch", "seq_shard", None), nc, aux
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, *, patches=None,
+            frames=None, cache=None, pos=None, ctx: ShardCtx = NOSHARD):
+    """Returns (h_final [B,S,D], new_cache, aux_loss)."""
+    cd = cfg.policy.compute_dtype
+    if frames is not None:
+        h = (frames.astype(cd) @ params["frontend"].astype(cd))
+        B, S = frames.shape[:2]
+    else:
+        B, S = tokens.shape
+        h = params["embed"].astype(cd)[tokens]
+    if patches is not None:
+        npatch = patches.shape[1]
+        h = jnp.concatenate([patches.astype(cd), h[:, npatch:]], axis=1)
+    h = ctx.constrain(h, "batch", "seq_shard", None)
+    positions = (jnp.arange(S) if pos is None else pos + jnp.arange(S))
+
+    segs = build_plan(cfg)
+    shared_attn = params.get("shared_attn")
+    new_cache: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, seg in enumerate(segs):
+        sp = params["segments"][f"seg{si}"]
+        sc = None if cache is None else cache[f"seg{si}"]
+        if seg.mode == "loop":
+            ncs = {}
+            for j, desc in enumerate(seg.pattern):
+                bc = None if sc is None else sc[str(j)]
+                h, nc, aux = _apply_block(cfg, desc, sp[str(j)], h,
+                                          positions=positions, cache=bc,
+                                          pos=pos, shared_attn=shared_attn,
+                                          ctx=ctx)
+                aux_total = aux_total + aux
+                ncs[str(j)] = {} if nc is None else nc
+            new_cache[f"seg{si}"] = ncs
+        else:
+            seg_specs = {str(j): block_spec(cfg, d)
+                         for j, d in enumerate(seg.pattern)}
+
+            def body(carry, xs):
+                hh, aux_acc = carry
+                bp, bc = xs
+                # Constrain per-layer param slices to their target sharding:
+                # the transpose of with_sharding_constraint constrains the
+                # cotangents too, so XLA reduce-scatters per-layer grads
+                # instead of all-reducing them (x40 collective reduction on
+                # qwen110-class FSDP; EXPERIMENTS.md §Perf).  Casting to the
+                # compute dtype BEFORE use halves all-gather wire bytes.
+                bp = _constrain_params(bp, seg_specs, ctx, cd)
+                ncs = {}
+                for j, desc in enumerate(seg.pattern):
+                    blk_c = None if bc is None else bc[str(j)]
+                    hh, nc, aux = _apply_block(cfg, desc, bp[str(j)], hh,
+                                               positions=positions,
+                                               cache=blk_c, pos=pos,
+                                               shared_attn=shared_attn,
+                                               ctx=ctx)
+                    aux_acc = aux_acc + aux
+                    ncs[str(j)] = {} if nc is None else nc
+                return (hh, aux_acc), ncs
+
+            if cfg.policy.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            xs = (sp, sc)
+            if sc is None:
+                # scan requires matching pytrees; use params-only xs
+                def body_np(carry, bp):
+                    return body(carry, (bp, None))
+                (h, aux_total), ys = jax.lax.scan(body_np, (h, aux_total), sp)
+            else:
+                (h, aux_total), ys = jax.lax.scan(body, (h, aux_total), xs)
+            new_cache[f"seg{si}"] = ys if sc is not None else {}
+
+    h = rmsnorm(h, params["ln_f"], cfg.rms_eps)
+    return h, (new_cache if cache is not None else None), aux_total
+
+
+def unembed_matrix(cfg: ModelConfig, params: dict):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx = NOSHARD):
+    """Training loss. batch: tokens/labels [B,S] (+patches/frames)."""
+    h, _, aux = forward(cfg, params, batch.get("tokens"),
+                        patches=batch.get("patches"),
+                        frames=batch.get("frames"), ctx=ctx)
+    W = unembed_matrix(cfg, params)
+    if cfg.causal and "labels" not in batch:
+        hh = h                                    # h[t] predicts tokens[t+1]
+        ll = jnp.roll(batch["tokens"], -1, axis=1)
+        mask = jnp.ones_like(ll, jnp.float32).at[:, -1].set(0.0)
+    else:
+        hh, ll = h, batch["labels"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(ll, jnp.float32)
+    ce = chunked_xent(hh, W, ll, mask)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+def prefill(cfg: ModelConfig, params: dict, tokens, cache, *,
+            patches=None, frames=None, ctx: ShardCtx = NOSHARD):
+    """Fill the cache from a prompt; returns (next_token_ids [B], cache)."""
+    h, new_cache, _ = forward(cfg, params, tokens, patches=patches,
+                              frames=frames, cache=cache, pos=None, ctx=ctx)
+    logits = (h[:, -1:] @ unembed_matrix(cfg, params).astype(h.dtype))
+    next_ids = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, 0]
+    return next_ids, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, tokens, pos,
+                ctx: ShardCtx = NOSHARD):
+    """One decode step. tokens: [B, 1]; pos: scalar int32 (cache fill level)."""
+    h, new_cache, _ = forward(cfg, params, tokens, cache=cache, pos=pos,
+                              ctx=ctx)
+    logits = (h[:, -1:] @ unembed_matrix(cfg, params).astype(h.dtype))
+    next_ids = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, 0]
+    return next_ids, new_cache
+
+
+# ------------------------------------------------------------------ builders
+def init_model(cfg: ModelConfig, key):
+    return materialize(model_spec(cfg), key, cfg.policy.param_dtype)
+
+
+def abstract_model(cfg: ModelConfig):
+    return abstract(model_spec(cfg), cfg.policy.param_dtype)
+
+
+def model_shardings(cfg: ModelConfig, mesh, rules=None):
+    return shardings(model_spec(cfg), mesh, cfg.policy.param_dtype, rules)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, key=None):
+    return materialize(cache_spec(cfg, batch, max_len), jax.random.PRNGKey(0),
+                       cfg.policy.cache_dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return abstract(cache_spec(cfg, batch, max_len), cfg.policy.cache_dtype)

@@ -1,0 +1,87 @@
+"""Parameter spec trees: one declaration drives real init (smoke tests),
+abstract ShapeDtypeStruct stand-ins (dry-run), and NamedShardings (pjit)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter leaf: shape + logical axes + init rule."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | fan_in | a_log
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x):
+    return isinstance(x, P)
+
+
+def tree_paths(spec, prefix=""):
+    if _is_leaf(spec):
+        yield prefix, spec
+        return
+    for k in sorted(spec):
+        yield from tree_paths(spec[k], f"{prefix}/{k}")
+
+
+def materialize(spec, key, dtype=jnp.float32):
+    """Real arrays (used only for reduced smoke configs & examples)."""
+    def leaf(path: str, p: P):
+        k = jax.random.fold_in(key, np.uint32(abs(hash(path)) % (2**31)))
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        if p.init == "a_log":   # mamba2 A in (-1, 0): A = -exp(A_log)
+            return jnp.log(jax.random.uniform(k, p.shape, dtype, 1.0, 16.0))
+        if p.init == "fan_in":
+            fan = p.shape[0] if len(p.shape) > 1 else 1
+            return (jax.random.normal(k, p.shape, dtype) / np.sqrt(max(1, fan)))
+        return jax.random.normal(k, p.shape, dtype) * p.scale
+
+    return _map_with_path(spec, leaf)
+
+
+def abstract(spec, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins — no device allocation (dry-run path)."""
+    return _map_with_path(spec, lambda _, p: jax.ShapeDtypeStruct(p.shape, dtype))
+
+
+def shardings(spec, mesh, dtype=jnp.float32, rules=None):
+    return _map_with_path(
+        spec, lambda _, p: named_sharding(mesh, p.shape, p.axes, rules))
+
+
+def pspecs(spec, mesh, rules=None):
+    from repro.sharding import partition_spec
+    return _map_with_path(
+        spec, lambda _, p: partition_spec(mesh, p.shape, p.axes, rules))
+
+
+def count_params(spec) -> int:
+    return sum(int(np.prod(p.shape)) for _, p in tree_paths(spec))
+
+
+def _map_with_path(spec, fn, prefix=""):
+    if _is_leaf(spec):
+        return fn(prefix, spec)
+    return {k: _map_with_path(v, fn, f"{prefix}/{k}") for k, v in spec.items()}
+
+
+def stack_specs(spec, n: int):
+    """Prepend a scanned 'stack' dim of size n to every leaf in the subtree."""
+    def leaf(_, p: P):
+        return P((n,) + p.shape, ("stack",) + p.axes, p.init, p.scale)
+    return _map_with_path(spec, leaf)

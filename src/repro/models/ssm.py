@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) block: chunked scan for train/prefill,
+single-step recurrence for decode.  Pure jnp; the intra-chunk hot loop has a
+Pallas kernel in repro.kernels.ssd_chunk validated against this reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import P
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads or d_in // cfg.ssm_head_dim
+    Pd = d_in // H
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    return d_in, H, Pd, G, N
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, H, Pd, G, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    return {
+        "in_proj": P((D, 2 * d_in + 2 * G * N + H), ("embed", "mlp")),
+        "conv_w": P((cfg.d_conv, conv_dim), (None, "mlp"), "fan_in"),
+        "conv_b": P((conv_dim,), ("mlp",), "zeros"),
+        "A_log": P((H,), (None,), "a_log"),
+        "D_skip": P((H,), (None,), "ones"),
+        "dt_bias": P((H,), (None,), "zeros"),
+        "norm_w": P((d_in,), ("mlp",), "zeros"),
+        "out_proj": P((d_in, D), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: [B, S, C]; w: [K, C] depthwise causal."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(pad[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def ssd_chunked(x, dt, A, Bc, Cc, chunk: int, state0=None):
+    """SSD chunked algorithm.
+
+    x: [B,S,H,P]; dt: [B,S,H]; A: [H] (negative); Bc/Cc: [B,S,G,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B, S, H, Pd = x.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    qk = H // G                                    # heads per group
+
+    dA = (dt * A[None, None, :]).astype(jnp.float32)            # [B,S,H]
+    xc = x.reshape(B, nc, chunk, H, Pd)
+    dtc = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    dAc = dA.reshape(B, nc, chunk, H)
+    Bcc = Bc.reshape(B, nc, chunk, G, N)
+    Ccc = Cc.reshape(B, nc, chunk, G, N)
+    cum = jnp.cumsum(dAc, axis=2)                               # [B,nc,Q,H]
+
+    # intra-chunk (quadratic within chunk): L[i,j] = exp(cum_i - cum_j) for i>=j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], li, -jnp.inf))
+    # scores[i,j,h] = (C_i . B_j) * L * dt_j
+    cb = jnp.einsum("bcigh,bcjgh->bcijg", Ccc.astype(jnp.float32),
+                    Bcc.astype(jnp.float32))                    # [B,nc,Qi,Qj,G]
+    cb = jnp.repeat(cb, qk, axis=-1)                            # -> H
+    scores = cb * L * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores,
+                         xc.astype(jnp.float32))
+
+    # chunk summaries: state contribution of each chunk
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)                # [B,nc,Q,H]
+    chunk_state = jnp.einsum(
+        "bcjhn,bcjhp->bchnp",
+        jnp.repeat(Bcc.astype(jnp.float32), qk, axis=3).reshape(B, nc, chunk, H, N),
+        xc.astype(jnp.float32) * (dtc * decay_out)[..., None])   # [B,nc,H,N,P]
+
+    # inter-chunk scan over chunk index
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [B,nc,H]
+    s0 = (jnp.zeros((B, H, N, Pd), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    def body(state, xs):
+        cs, cd = xs                                             # [B,H,N,P],[B,H]
+        out_state = state
+        state = state * cd[:, :, None, None] + cs
+        return state, out_state
+
+    final, states_in = jax.lax.scan(
+        body, s0, (chunk_state.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)              # [B,nc,H,N,P]
+
+    decay_in = jnp.exp(cum)                                     # [B,nc,Q,H]
+    Ch = jnp.repeat(Ccc.astype(jnp.float32), qk, axis=3).reshape(B, nc, chunk, H, N)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Ch * decay_in[..., None], states_in)
+
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y.astype(x.dtype), final
+
+
+def ssm_apply(cfg: ModelConfig, p: dict, h, *, cache=None, ctx=None):
+    """h: [B,S,D] -> (out, new_cache).  cache={'conv':[B,K-1,Cd],'state':[B,H,N,P]}"""
+    B, S, D = h.shape
+    d_in, H, Pd, G, N = ssm_dims(cfg)
+    cd = h.dtype
+    zxbcdt = h @ p["in_proj"].astype(cd)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * G * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * G * N:]
+
+    new_cache = None
+    if cache is not None and S == 1:                    # decode step
+        K = cfg.d_conv
+        window = jnp.concatenate([cache["conv"].astype(cd), xBC], axis=1)
+        xBC_t = (window * p["conv_w"].astype(cd)[None]).sum(1, keepdims=True) \
+            + p["conv_b"].astype(cd)[None, None]
+        xBC = jax.nn.silu(xBC_t.astype(jnp.float32)).astype(cd)
+        conv_new = window[:, 1:, :]
+        x = xBC[..., :d_in].reshape(B, 1, H, Pd)
+        Bc = xBC[..., d_in:d_in + G * N].reshape(B, 1, G, N)
+        Cc = xBC[..., d_in + G * N:].reshape(B, 1, G, N)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))  # [B,1,H]
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dA = jnp.exp(dt[..., 0, :] * A[None])                     # [B,H]
+        qk = H // G
+        Bh = jnp.repeat(Bc[:, 0], qk, axis=1)                     # [B,H,N]
+        state = cache["state"].astype(jnp.float32)
+        state = state * dA[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh * dt[:, 0, :, None], x[:, 0].astype(jnp.float32))
+        Ch = jnp.repeat(Cc[:, 0], qk, axis=1)
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, state)                # [B,H,P]
+        y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * x[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, d_in).astype(cd)
+        new_cache = {"conv": conv_new.astype(cache["conv"].dtype),
+                     "state": state.astype(cache["state"].dtype)}
+    else:                                               # train / prefill
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(cd),
+                                       p["conv_b"].astype(cd)).astype(jnp.float32)).astype(cd)
+        x = xBC[..., :d_in].reshape(B, S, H, Pd)
+        Bc = xBC[..., d_in:d_in + G * N].reshape(B, S, G, N)
+        Cc = xBC[..., d_in + G * N:].reshape(B, S, G, N)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y4, final = ssd_chunked(x, dt, A, Bc, Cc, min(cfg.ssd_chunk, S))
+        y = y4 + p["D_skip"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+        y = y.reshape(B, S, d_in).astype(cd)
+        if cache is not None:                           # prefill: snapshot state
+            K = cfg.d_conv
+            conv_new = xBC[..., : d_in + 2 * G * N]     # raw pre-conv needed...
+            # store last K-1 *pre-activation* inputs: recompute from zxbcdt
+            pre = zxbcdt[..., d_in:2 * d_in + 2 * G * N]
+            conv_new = pre[:, -(K - 1):, :]
+            new_cache = {"conv": conv_new.astype(cache["conv"].dtype),
+                         "state": final.astype(cache["state"].dtype)}
+
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = rmsnorm(g.astype(cd), p["norm_w"], cfg.rms_eps)
+    return g @ p["out_proj"].astype(cd), new_cache
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int):
+    d_in, H, Pd, G, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    return {
+        "conv": P((batch, cfg.d_conv - 1, conv_dim), ("batch", None, "mlp"), "zeros"),
+        "state": P((batch, H, N, Pd), ("batch", None, "dstate", None), "zeros"),
+    }

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, TrainState, abstract_state,  # noqa: F401
+                               apply_updates, global_norm, init_state,
+                               state_shardings)

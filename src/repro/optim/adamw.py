@@ -1,0 +1,88 @@
+"""AdamW with global-norm clipping, cosine schedule, and policy-controlled
+moment dtype (bf16 moments for the >=200B archs — see DESIGN.md)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def init_state(params, moment_dtype=jnp.float32) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return TrainState(params=params,
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_state(params, moment_dtype=jnp.float32) -> TrainState:
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype)
+    return TrainState(params=params,
+                      m=jax.tree.map(sds, params),
+                      v=jax.tree.map(sds, params),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def state_shardings(param_shardings, mesh) -> TrainState:
+    from jax.sharding import NamedSharding, PartitionSpec
+    return TrainState(params=param_shardings,
+                      m=param_shardings, v=param_shardings,
+                      step=NamedSharding(mesh, PartitionSpec()))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, state: TrainState, grads) -> TrainState:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+
+    def upd(p, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+        mh = m32 / (1 - cfg.b1 ** step)
+        vh = v32 / (1 - cfg.b2 ** step)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p32 * (p.ndim > 1))
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, state.params, state.m, state.v, grads)
+    params = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return TrainState(params=params, m=m, v=v, step=step)

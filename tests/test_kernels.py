@@ -1,0 +1,158 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle, swept
+over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lease_probe import lease_probe
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_chunk import ssd_chunk
+from repro.models.ssm import ssd_chunked
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D", [
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 8, 2, 64),      # GQA 4:1
+    (1, 128, 384, 4, 1, 128),     # MQA, rectangular
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+def test_flash_attention(B, Sq, Sk, Hq, Hkv, D, dtype, causal, window):
+    if causal and Sq != Sk:
+        pytest.skip("causal assumes aligned q/k")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,Sk,Hq,Hkv,D,kv_len", [
+    (2, 512, 4, 4, 64, 384),
+    (1, 1024, 8, 2, 128, 1000),
+    (4, 256, 4, 1, 64, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, Sk, Hq, Hkv, D, kv_len, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    out = decode_attention(q, k, v, kv_len, bk=128, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("R,D", [(64, 256), (128, 960), (32, 80)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(R, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], (R, D), dtype)
+    w = jax.random.normal(ks[1], (D,), jnp.float32) * 0.1
+    out = rmsnorm(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [
+    (1, 2, 32, 2, 16, 16),
+    (2, 4, 64, 4, 32, 32),
+])
+def test_ssd_chunk_kernel(B, nc, Q, H, P, N):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, nc, Q, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.5))
+    Bc = jax.random.normal(ks[3], (B, nc, Q, H, N), jnp.float32)
+    Cc = jax.random.normal(ks[4], (B, nc, Q, H, N), jnp.float32)
+    y, st, cum = ssd_chunk(x, dt, A, Bc, Cc, interpret=True)
+    for b in range(B):
+        for c in range(nc):
+            for h in range(H):
+                yr, sr, cr = ref.ssd_chunk_ref(x[b, c, :, h], dt[b, c, :, h],
+                                               A[h], Bc[b, c, :, h],
+                                               Cc[b, c, :, h])
+                np.testing.assert_allclose(y[b, c, :, h], yr, rtol=1e-4,
+                                           atol=1e-4)
+                np.testing.assert_allclose(st[b, c, h], sr, rtol=1e-4,
+                                           atol=1e-4)
+                np.testing.assert_allclose(cum[b, c, :, h], cr, rtol=1e-5,
+                                           atol=1e-5)
+
+
+def test_ssd_kernel_matches_full_ssm_path():
+    """Kernel intra-chunk + jnp inter-chunk == models.ssm.ssd_chunked."""
+    B, S, H, P, N, Q = 2, 128, 4, 16, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.5))
+    Bc = jax.random.normal(ks[3], (B, S, 1, N), jnp.float32)
+    Cc = jax.random.normal(ks[4], (B, S, 1, N), jnp.float32)
+    y_ref, final_ref = ssd_chunked(x, dt, A, Bc, Cc, Q)
+
+    nc = S // Q
+    xc = x.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bh = jnp.broadcast_to(Bc.reshape(B, nc, Q, 1, N), (B, nc, Q, H, N))
+    Ch = jnp.broadcast_to(Cc.reshape(B, nc, Q, 1, N), (B, nc, Q, H, N))
+    y_in, st, cum = ssd_chunk(xc, dtc, A, Bh, Ch, interpret=True)
+    # inter-chunk combine (jnp)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
+    state = jnp.zeros((B, H, N, P))
+    ys = []
+    for c in range(nc):
+        decay_in = jnp.exp(cum[:, c])                          # [B,Q,H]
+        y_int = jnp.einsum("bqhn,bhnp->bqhp",
+                           Ch[:, c] * decay_in.transpose(0, 1, 2)[..., None],
+                           state)
+        ys.append(y_in[:, c] + y_int)
+        state = state * chunk_decay[:, c][:, :, None, None] + st[:, c]
+    y = jnp.stack(ys, 1).reshape(B, S, H, P)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(state, final_ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("N,W", [(64, 4), (256, 16), (100, 8)])
+def test_lease_probe(N, W):
+    rng = np.random.default_rng(0)
+    tag_rows = rng.integers(-1, 50, (N, W)).astype(np.int32)
+    rts_rows = rng.integers(0, 40, (N, W)).astype(np.int32)
+    cts = rng.integers(0, 40, (N,)).astype(np.int32)
+    addr = rng.integers(0, 50, (N,)).astype(np.int32)
+    mwts = rng.integers(0, 40, (N,)).astype(np.int32)
+    mrts = mwts + rng.integers(1, 10, (N,)).astype(np.int32)
+    # make hit ways unique per row (engine invariant: one copy per cache)
+    for i in range(N):
+        seen = set()
+        for j in range(W):
+            if tag_rows[i, j] in seen:
+                tag_rows[i, j] = -2 - j
+            seen.add(tag_rows[i, j])
+    got = lease_probe(jnp.asarray(tag_rows), jnp.asarray(rts_rows),
+                      jnp.asarray(cts), jnp.asarray(addr),
+                      jnp.asarray(mwts), jnp.asarray(mrts), interpret=True)
+    want = ref.lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts)
+    for g, w, name in zip(got, want, ["hit", "way", "nwts", "nrts", "ncts"]):
+        hit_mask = np.asarray(want[0])
+        g, w = np.asarray(g), np.asarray(w)
+        if name == "way":           # way only meaningful on tag hits
+            eq = (tag_rows == addr[:, None]).any(-1)
+            np.testing.assert_array_equal(g[eq], w[eq], err_msg=name)
+        else:
+            np.testing.assert_array_equal(g, w, err_msg=name)

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for the HALCONE protocol invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protocol, simulate, sm_wt_halcone
+from repro.core.engine import FENCE, NOP, READ, WRITE
+
+
+def small_cfg():
+    return sm_wt_halcone(n_gpus=2, cus_per_gpu=2, l1_sets=4, l2_sets=8,
+                         tsu_sets=16)
+
+
+op_strat = st.tuples(st.sampled_from([NOP, READ, WRITE]),
+                     st.integers(min_value=0, max_value=31))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(op_strat, min_size=4, max_size=16),
+                min_size=4, max_size=4),
+       st.integers(0, 3))
+def test_random_traces_swmr_and_monotone(traces_py, fence_round):
+    """For arbitrary traces: clocks are monotone, every read returns a version
+    that existed at read time (never from the future), and the engine never
+    produces out-of-range data."""
+    cfg = small_cfg()
+    T = max(len(s) for s in traces_py) + 1
+    ops = np.zeros((4, T), np.int32)
+    addrs = np.zeros((4, T), np.int32)
+    for i, s in enumerate(traces_py):
+        for t, (o, a) in enumerate(s):
+            ops[i, t], addrs[i, t] = o, a
+    ops[:, fence_round] = np.where(ops[:, fence_round] == NOP, FENCE,
+                                   ops[:, fence_round])
+    r = simulate(cfg, ops, addrs)
+    log = np.asarray(r["read_log"])
+    # total writes per address over the whole run
+    total_writes = np.zeros(64, np.int64)
+    for i in range(4):
+        for t in range(T):
+            if ops[i, t] == WRITE:
+                total_writes[addrs[i, t]] += 1
+    # cumulative writes per address *before or at* each round
+    cum = np.zeros((T + 1, 64), np.int64)
+    for t in range(T):
+        cum[t + 1] = cum[t]
+        for i in range(4):
+            if ops[i, t] == WRITE:
+                cum[t + 1, addrs[i, t]] += 1
+    for i in range(4):
+        for t in range(T):
+            if ops[i, t] == READ:
+                v = log[i, t]
+                assert 0 <= v <= cum[t + 1, addrs[i, t]], (
+                    f"cu{i} round {t}: version {v} from the future "
+                    f"(only {cum[t+1, addrs[i, t]]} writes so far)")
+    st_ = r["state"]
+    assert (np.asarray(st_.l1_cts) >= 0).all()
+    assert (np.asarray(st_.l2_cts) >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 3), st.integers(0, 3))
+def test_drf_visibility(n_pre_reads, writer, reader):
+    """write -> fence -> read ALWAYS sees the write (any lease history)."""
+    cfg = small_cfg()
+    T = n_pre_reads + 3
+    ops = np.zeros((4, T), np.int32)
+    addrs = np.full((4, T), 3, np.int32)
+    ops[reader, :n_pre_reads] = READ          # stretch the lease arbitrarily
+    ops[writer, n_pre_reads] = WRITE
+    ops[:, n_pre_reads + 1] = FENCE
+    ops[reader, n_pre_reads + 2] = READ
+    r = simulate(cfg, ops, addrs)
+    assert np.asarray(r["read_log"])[reader, -1] == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, protocol.TS_MAX), st.integers(1, 100),
+       st.integers(1, 100))
+def test_lease_math_pure(memts, rd, wr):
+    """Write leases start strictly after every read admitted before them."""
+    r_lease, memts_r = protocol.mm_read(np.int64(memts), rd)
+    w_lease, memts_w = protocol.mm_write(np.int64(memts), wr)
+    assert w_lease.wts == memts + 1 > memts          # strict ordering
+    assert r_lease.rts == memts_r
+    assert w_lease.rts == memts_w
+    inst = protocol.install(np.int64(5), w_lease.wts, w_lease.rts)
+    assert inst.rts > inst.wts - 1                    # non-degenerate lease
+    assert protocol.cts_after_write(np.int64(5), inst.wts) >= 5
+
+
+def test_timestamp_overflow_reinit():
+    """16-bit overflow re-initializes instead of flushing; data stays correct
+    because of write-through (one extra MM access, §3.2.6)."""
+    cfg = small_cfg()
+    cfg = type(cfg)(**{**cfg.__dict__, "rd_lease": 30000, "wr_lease": 29000})
+    ops = np.zeros((4, 10), np.int32)
+    addrs = np.full((4, 10), 2, np.int32)
+    ops[0, :6] = [WRITE, WRITE, WRITE, READ, WRITE, READ]  # memts: 29k..116k
+    r = simulate(cfg, ops, addrs)
+    log = np.asarray(r["read_log"][0])
+    assert log[3] == 3                                # pre-overflow correct
+    assert log[5] == 4                                # post-overflow correct
+    memts = np.asarray(r["state"].tsu_memts)
+    assert memts.max() <= protocol.TS_MAX + 1
+
+
+def test_tsu_eviction_lowest_memts():
+    """When a TSU set fills, the entry with lowest memts is evicted and the
+    evicted block's next access is a compulsory MM miss (still correct)."""
+    cfg = sm_wt_halcone(n_gpus=2, cus_per_gpu=2, tsu_sets=1, tsu_ways=2,
+                        l1_sets=4, l2_sets=8)
+    ops = np.zeros((4, 8), np.int32)
+    addrs = np.zeros((4, 8), np.int32)
+    # 3 addresses through a 2-way TSU set
+    for t, a in enumerate([1, 2, 3, 1]):
+        ops[0, t] = READ
+        addrs[0, t] = a
+    r = simulate(cfg, ops, addrs)
+    assert (np.asarray(r["read_log"][0, :4]) == 0).all()
+    tags = np.asarray(r["state"].tsu_tag[:, :, :2])
+    assert (tags >= 0).sum() <= 2 * cfg.n_hbm
