@@ -1,0 +1,181 @@
+"""Coherence-fabric benchmark: hit-rate and traffic vs. rd_lease/wr_lease.
+
+Drives the sharded TSU service (repro.coherence.fabric) with three host-side
+workloads and reports the full FabricStats block per scenario per lease
+setting — the production-path counterpart of the simulator's Fig. 7/8 sweeps
+(same counter names, so rows are directly comparable):
+
+  shared_prefix  — multi-node serving: replicas re-read a hot set of prefix
+                   blocks; a writer occasionally republishes (model refresh).
+  local_sgd      — training: W workers read their param blocks each step and
+                   write through once per wr_lease-step window, with a fence
+                   at the window boundary (the all-reduce).
+  mixed_churn    — 50/50 read-write over a key space larger than the caches:
+                   worst case for lease reuse, stresses victim-way eviction.
+
+    PYTHONPATH=src python benchmarks/fabric_bench.py [--ops 4000] [--json PATH]
+
+Runs on CPU in well under 60 s; emits JSON to stdout and benchmarks/artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.coherence.fabric import (FabricConfig, ReplicaCache,  # noqa: E402
+                                    SharedCache, TSUFabric)
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+LEASE_GRID = [(2, 2), (8, 4), (32, 16)]
+
+
+def build(rd, wr, *, n_nodes=2, replicas_per_node=2, n_shards=4,
+          max_in_flight=8):
+    fabric = TSUFabric(FabricConfig(n_shards=n_shards, rd_lease=rd,
+                                    wr_lease=wr, max_in_flight=max_in_flight))
+    nodes = [SharedCache(fabric, node_id=i) for i in range(n_nodes)]
+    replicas = [ReplicaCache(nodes[i]) for i in range(n_nodes)
+                for _ in range(replicas_per_node)]
+    return fabric, nodes, replicas
+
+
+def scenario_shared_prefix(rd, wr, ops):
+    """Hot prefix blocks read by every replica; periodic republish."""
+    fabric, nodes, replicas = build(rd, wr)
+    rng = np.random.default_rng(0)
+    hot = [f"prefix/{i}" for i in range(16)]
+    writer = replicas[0]
+    for k in hot:
+        writer.put(k, f"{k}@0")
+    for t in range(ops):
+        r = replicas[int(rng.integers(len(replicas)))]
+        k = hot[int(rng.zipf(1.5)) % len(hot)]
+        r.get(k)
+        if t % 200 == 199:                 # model refresh: republish one block
+            writer.put(hot[int(rng.integers(len(hot)))], f"v@{t}")
+        if t % 500 == 499:                 # periodic reader sync point
+            fabric.barrier()
+    return fabric
+
+
+def scenario_local_sgd(rd, wr, ops):
+    """Each worker reads its param blocks every step; write-through + fence
+    once per wr_lease-step window (the paper's lease-synced local SGD)."""
+    fabric, nodes, replicas = build(rd, wr)
+    params = [f"param/{i}" for i in range(8)]
+    for k in params:
+        replicas[0].put(k, 0)
+    fabric.barrier()
+    steps = max(1, ops // (len(replicas) * len(params)))
+    for step in range(steps):
+        for w, r in enumerate(replicas):
+            for k in params:
+                r.get(k)
+        if (step + 1) % wr == 0:           # window boundary: all-reduce
+            for w, r in enumerate(replicas):
+                for k in params:
+                    r.put(k, step)
+            fabric.barrier()
+    return fabric
+
+
+def scenario_mixed_churn(rd, wr, ops):
+    """Uniform 50/50 read-write over a key space bigger than the caches."""
+    fabric, nodes, replicas = build(rd, wr)
+    rng = np.random.default_rng(1)
+    keys = [f"blk/{i}" for i in range(512)]
+    for k in keys[::8]:
+        replicas[0].put(k, 0)
+    for t in range(ops):
+        r = replicas[int(rng.integers(len(replicas)))]
+        k = keys[int(rng.integers(len(keys)))]
+        if rng.random() < 0.5:
+            r.get(k)
+        else:
+            r.put(k, t)
+    fabric.barrier()
+    return fabric
+
+
+SCENARIOS = {
+    "shared_prefix": scenario_shared_prefix,
+    "local_sgd": scenario_local_sgd,
+    "mixed_churn": scenario_mixed_churn,
+}
+
+
+def summarize(stats):
+    d = stats.to_dict()
+    lookups = d["l1_hits"] + d["l1_to_l2"]
+    d["hit_rate_l1"] = round(d["l1_hits"] / max(lookups, 1), 4)
+    d["mm_traffic_per_op"] = round(
+        d["l2_to_mm"] / max(d["reads"] + d["writes"], 1), 4)
+    return d
+
+
+def run(force: bool = False) -> None:
+    """Harness entry point (benchmarks.run): cached sweep + CSV rows."""
+    from benchmarks import common
+
+    def compute():
+        out = {}
+        for name, fn in SCENARIOS.items():
+            out[name] = {}
+            for rd, wr in LEASE_GRID:
+                t0 = time.time()
+                fabric = fn(rd, wr, 4000)
+                row = summarize(fabric.stats)
+                row["wall_us"] = (time.time() - t0) * 1e6
+                out[name][f"rd{rd}_wr{wr}"] = row
+        return out
+
+    out = common.cached("fabric_bench_suite", compute, force=force)
+    for name, grid in out.items():
+        if name.startswith("_"):
+            continue
+        for lease, row in grid.items():
+            common.emit(f"fabric/{name}/{lease}", row.get("wall_us", 0.0),
+                        f"l1_hit={row['hit_rate_l1']};"
+                        f"mm_per_op={row['mm_traffic_per_op']};"
+                        f"inval={row['inval_msgs']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", type=int, default=4000,
+                    help="approximate client ops per scenario")
+    ap.add_argument("--json", type=pathlib.Path,
+                    default=ART / "fabric_bench.json")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    out = {}
+    for name, fn in SCENARIOS.items():
+        out[name] = {}
+        for rd, wr in LEASE_GRID:
+            fabric = fn(rd, wr, args.ops)
+            row = summarize(fabric.stats)
+            out[name][f"rd{rd}_wr{wr}"] = row
+            print(f"{name:14s} rd={rd:3d} wr={wr:3d} "
+                  f"l1_hit={row['hit_rate_l1']:.3f} "
+                  f"mm/op={row['mm_traffic_per_op']:.3f} "
+                  f"inval={row['inval_msgs']} "
+                  f"self_inval={row['self_invalidations']}", flush=True)
+    out["_meta"] = {"ops": args.ops, "lease_grid": LEASE_GRID,
+                    "wall_s": round(time.time() - t0, 2)}
+    args.json.parent.mkdir(parents=True, exist_ok=True)
+    args.json.write_text(json.dumps(out, indent=1))
+    print(json.dumps(out["_meta"]))
+    print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,13 +14,13 @@ def main() -> None:
                     help="recompute instead of using cached artifacts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig7,fig8,fig9,"
-                         "lease,kernels,roofline)")
+                         "lease,kernels,roofline,fabric)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (fig2_rdma_gap, fig7_speedup, fig8_scaling,
-                            fig9_xtreme, kernel_bench, lease_sensitivity,
-                            roofline)
+    from benchmarks import (fabric_bench, fig2_rdma_gap, fig7_speedup,
+                            fig8_scaling, fig9_xtreme, kernel_bench,
+                            lease_sensitivity, roofline)
     suites = [
         ("fig2", fig2_rdma_gap.main),
         ("fig7", fig7_speedup.main),
@@ -29,6 +29,7 @@ def main() -> None:
         ("lease", lease_sensitivity.main),
         ("kernels", kernel_bench.main),
         ("roofline", roofline.main),
+        ("fabric", fabric_bench.run),
     ]
     print("name,us_per_call,derived")
     failed = []

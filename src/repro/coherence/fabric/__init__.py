@@ -1,0 +1,17 @@
+"""Coherence fabric: the sharded TSU service behind every lease in the repo.
+
+Layout (DESIGN.md §3):
+  tsu.py    — TSUShard / TSUFabric: the MM+TSU authority, key-hash sharded
+  cache.py  — ReplicaCache over SharedCache: the host L1-over-L2 client tiers
+  writeq.py — WriteQueue: bounded posted write-throughs + fence
+  stats.py  — FabricStats: the engine.COUNTERS-compatible telemetry block
+
+`repro.coherence.kv_lease` (serving) and `repro.coherence.lease_sync`
+(training) are thin adapters over this package; the hierarchy simulator
+(`repro.core.engine`) is the same protocol run under a timing model.
+"""
+from repro.coherence.fabric.cache import ReplicaCache, SharedCache  # noqa: F401
+from repro.coherence.fabric.stats import FabricStats  # noqa: F401
+from repro.coherence.fabric.tsu import (FabricConfig, LeaseGrant,  # noqa: F401
+                                        TSUFabric, TSUShard, stable_hash)
+from repro.coherence.fabric.writeq import WriteQueue  # noqa: F401

@@ -1,0 +1,63 @@
+"""Unified coherence telemetry: one counter block for simulator and service.
+
+MGSim/MGMark's lesson is that coherence studies need ONE instrumented
+component with uniform counters; the fabric therefore reports the exact
+counter names of the hierarchy simulator (``repro.core.engine.COUNTERS``)
+plus a few service-level extras, so a production trace and a simulated trace
+are directly comparable row-for-row.
+
+Name mapping (service <-> simulator):
+  l1_*  = ReplicaCache (a replica's private tier, the CU's L1)
+  l2_*  = SharedCache  (the node-shared tier, the GPU's L2)
+  *_mm  = TSUFabric    (the sharded TSU + main-memory authority)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import engine
+
+
+@dataclasses.dataclass
+class FabricStats:
+    """Counter block; field names are a superset of ``engine.COUNTERS``."""
+
+    # --- simulator-compatible counters (engine.COUNTERS) ---
+    reads: int = 0            # client read ops
+    writes: int = 0           # client write ops
+    l1_hits: int = 0          # replica-tier lease hits
+    l2_hits: int = 0          # shared-tier lease hits
+    l1_to_l2: int = 0         # replica misses + write-throughs descending
+    l2_to_mm: int = 0         # fabric (TSU+MM) accesses
+    coh_miss_l1: int = 0      # replica tag hit, lease expired (self-inval)
+    coh_miss_l2: int = 0      # shared tag hit, lease expired (self-inval)
+    wb_evictions: int = 0     # always 0: the fabric is write-through
+    inval_msgs: int = 0       # always 0: HALCONE sends no invalidations
+    pcie_blocks: int = 0      # MM accesses routed to a non-home TSU shard
+    # --- service extras ---
+    write_throughs: int = 0   # queue drains that reached the fabric
+    self_invalidations: int = 0  # expired lines dropped (coh_miss_l1 + l2)
+    compulsory: int = 0       # replica misses with no tag present
+    refetches: int = 0        # replica fills from below (shared or MM)
+    capacity_evictions: int = 0  # victim-way displacements of live lines
+    tsu_evictions: int = 0    # TSU set overflow victims (memts reinit to 0)
+    overflow_reinits: int = 0 # 16-bit timestamp wraps (Algorithm: reinit)
+    fences: int = 0           # barrier ops (kernel-boundary cts jump)
+
+    def bump(self, name: str, by: int = 1) -> None:
+        setattr(self, name, getattr(self, name) + by)
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def engine_view(self) -> Dict[str, int]:
+        """Only the simulator-shared counters, in engine.COUNTERS order."""
+        d = self.to_dict()
+        return {k: d[k] for k in engine.COUNTERS}
+
+
+# The fabric's telemetry must never drift from the simulator's.
+_missing = set(engine.COUNTERS) - {f.name for f in
+                                   dataclasses.fields(FabricStats)}
+assert not _missing, f"FabricStats lost engine counters: {_missing}"

@@ -1,99 +1,116 @@
 """Lease-coherent prefix-KV cache for multi-replica serving.
 
 The serving-side transfer of HALCONE (DESIGN.md §2b): prefill results (prefix
-KV blocks) are shared across serving replicas.  The authoritative store plays
-the MM+TSU; each replica's local cache holds blocks with (wts, rts) leases and
-*self-invalidates* on expiry instead of receiving invalidation messages when a
-prefix is recomputed/updated (e.g. after a model refresh or cache eviction
-upstream).  Identical timestamp rules to repro.core.protocol.
+KV blocks) are shared across serving replicas.  Since the coherence fabric
+landed, this module is a THIN ADAPTER: the sharded TSU service
+(`repro.coherence.fabric`) is the MM+TSU, and each replica's local cache is a
+fabric `ReplicaCache` over the node's `SharedCache`.  Replicas still
+*self-invalidate* on lease expiry instead of receiving invalidation messages
+when a prefix is recomputed/updated (e.g. after a model refresh or cache
+eviction upstream); all timestamp rules live in `repro.core.protocol`, called
+only by the fabric.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
-from repro.core import protocol
-
-
-@dataclasses.dataclass
-class _Entry:
-    value: Any
-    version: int
-    memts: int = 0
+from repro.coherence.fabric import (FabricConfig, ReplicaCache, SharedCache,
+                                    TSUFabric)
 
 
 class AuthoritativeStore:
-    """The MM+TSU: versioned prefix blocks + memts per key."""
+    """The MM+TSU front door: versioned prefix blocks + memts per key.
 
-    def __init__(self, rd_lease: int = 8, wr_lease: int = 4):
-        self.rd_lease = rd_lease
-        self.wr_lease = wr_lease
-        self.blocks: Dict[str, _Entry] = {}
+    Adapter over a `TSUFabric`; also owns the node-shared cache tier that
+    every `LeaseKVCache` replica attached to this store reads through.
+    """
+
+    def __init__(self, rd_lease: Optional[int] = None,
+                 wr_lease: Optional[int] = None,
+                 fabric: Optional[TSUFabric] = None, node_id: int = 0):
+        if fabric is None:
+            fabric = TSUFabric(FabricConfig(
+                n_shards=1, rd_lease=rd_lease if rd_lease is not None else 8,
+                wr_lease=wr_lease if wr_lease is not None else 4,
+                max_in_flight=0))
+        elif ((rd_lease is not None and rd_lease != fabric.cfg.rd_lease)
+              or (wr_lease is not None and wr_lease != fabric.cfg.wr_lease)):
+            raise ValueError(
+                "explicit rd_lease/wr_lease conflict with the supplied "
+                f"fabric's config ({fabric.cfg.rd_lease}/{fabric.cfg.wr_lease})"
+                "; set them on the FabricConfig instead")
+        self.fabric = fabric
+        self.rd_lease = self.fabric.cfg.rd_lease
+        self.wr_lease = self.fabric.cfg.wr_lease
+        # legacy stores write through synchronously (max_in_flight=0)
+        self.shared = SharedCache(self.fabric, node_id=node_id,
+                                  max_in_flight=0)
+
+    @property
+    def blocks(self) -> Dict[str, Any]:
+        """Live view of the fabric's MM+TSU rows (``.value/.version/.memts``)."""
+        return self.fabric.entries()
 
     def write(self, key: str, value: Any) -> Tuple[int, int]:
-        e = self.blocks.get(key)
-        memts = e.memts if e else 0
-        lease, new_memts = protocol.mm_write(memts, self.wr_lease)
-        ver = (e.version + 1) if e else 1
-        self.blocks[key] = _Entry(value, ver, new_memts)
-        return int(lease.wts), int(lease.rts)
+        """Publish around the replicas (upstream recompute / model refresh).
+        The grant is adopted into the node tier so the node clock advances —
+        otherwise a reader fencing past memts could be served the old value
+        from a shared line whose lease never expires."""
+        grant = self.fabric.write(key, value)
+        self.shared.adopt(key, value, grant)
+        return grant.wts, grant.rts
 
     def read(self, key: str) -> Optional[Tuple[Any, int, int, int]]:
-        e = self.blocks.get(key)
-        if e is None:
+        grant = self.fabric.read(key)
+        if grant is None:
             return None
-        lease, e.memts = protocol.mm_read(e.memts, self.rd_lease)
-        return e.value, e.version, int(lease.wts), int(lease.rts)
+        return grant.value, grant.version, grant.wts, grant.rts
 
 
 class LeaseKVCache:
     """A serving replica's local cache with a logical clock.
 
-    cts advances on every local admission of a new version (a 'write' in
-    protocol terms: the replica observed new state).  Reads hit while
-    cts <= rts; expiry triggers a refetch from the store — NO invalidation
-    traffic ever flows between replicas.
+    cts advances on every write-through this replica performs; reads hit
+    while cts <= rts; expiry triggers a refetch from the node tier or the
+    fabric — NO invalidation traffic ever flows between replicas.
     """
+
+    _WAYS = 4
 
     def __init__(self, store: AuthoritativeStore, capacity: int = 128):
         self.store = store
         self.capacity = capacity
-        self.cts = 0
-        self.local: Dict[str, dict] = {}
-        self.stats = {"hits": 0, "coherence_misses": 0, "compulsory": 0,
-                      "refetches": 0, "capacity_evictions": 0}
+        self.replica = ReplicaCache(store.shared,
+                                    sets=max(1, capacity // self._WAYS),
+                                    ways=self._WAYS)
+
+    # the legacy tests drive the replica clock directly (reader fence)
+    @property
+    def cts(self) -> int:
+        return self.replica.cts
+
+    @cts.setter
+    def cts(self, v: int) -> None:
+        self.replica.cts = int(v)
 
     def get(self, key: str):
-        ent = self.local.get(key)
-        if ent is not None and protocol.valid(self.cts, ent["rts"]):
-            self.stats["hits"] += 1
-            return ent["value"], ent["version"]
-        if ent is not None:
-            self.stats["coherence_misses"] += 1
-        else:
-            self.stats["compulsory"] += 1
-        got = self.store.read(key)
-        if got is None:
-            return None
-        value, ver, wts, rts = got
-        self.stats["refetches"] += 1
-        lease = protocol.install(self.cts, wts, rts)
-        self._install(key, value, ver, int(lease.wts), int(lease.rts))
-        return value, ver
+        return self.replica.get(key)
 
-    def put(self, key: str, value: Any):
-        """Local write-through: publish to the store, adopt its lease, and
-        advance this replica's clock (cts = max(cts, wts))."""
-        wts, rts = self.store.write(key, value)
-        lease = protocol.install(self.cts, wts, rts)
-        self.cts = int(protocol.cts_after_write(self.cts, lease.wts))
-        ver = self.store.blocks[key].version
-        self._install(key, value, ver, int(lease.wts), int(lease.rts))
+    def put(self, key: str, value: Any) -> None:
+        """Write-through: publish to the fabric, adopt its lease, and advance
+        this replica's clock (cts = max(cts, wts))."""
+        self.replica.put(key, value)
 
-    def _install(self, key, value, ver, wts, rts):
-        if len(self.local) >= self.capacity and key not in self.local:
-            victim = min(self.local, key=lambda k: self.local[k]["rts"])
-            del self.local[victim]
-            self.stats["capacity_evictions"] += 1
-        self.local[key] = {"value": value, "version": ver,
-                           "wts": wts, "rts": rts}
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counter names, derived from the replica's FabricStats."""
+        s = self.replica.stats
+        return {"hits": s.l1_hits,
+                "coherence_misses": s.coh_miss_l1,
+                "compulsory": s.compulsory,
+                "refetches": s.refetches,
+                "capacity_evictions": s.capacity_evictions}
+
+    @property
+    def fabric_stats(self):
+        return self.replica.stats

@@ -37,15 +37,30 @@ class LeaseConfig:
 
 
 class LeaseClock:
-    """Lamport bookkeeping for the parameter store (host-level)."""
+    """Lamport bookkeeping for the parameter store (host-level).
 
-    def __init__(self):
-        self.memts = 0
+    Thin adapter over the coherence fabric: the parameter blob is one block
+    in the sharded TSU service, and every window's write-through is a fabric
+    ``mm_write`` — so training's clock shares the 16-bit overflow reinit and
+    the telemetry of the serving path instead of re-deriving the rules.
+    """
 
-    def on_sync(self, wr_lease: int):
+    PARAM_KEY = "params"
+
+    def __init__(self, fabric=None):
+        from repro.coherence.fabric import FabricConfig, TSUFabric
+        self.fabric = fabric or TSUFabric(FabricConfig(n_shards=1,
+                                                       max_in_flight=0))
+
+    @property
+    def memts(self) -> int:
+        return self.fabric.memts(self.PARAM_KEY)
+
+    def on_sync(self, wr_lease: int, version_tag=None):
         from repro.core import protocol
-        lease, self.memts = protocol.mm_write(self.memts, wr_lease)
-        return lease                    # (wts, rts) for the new param version
+        grant = self.fabric.write(self.PARAM_KEY, version_tag,
+                                  wr_lease=wr_lease)
+        return protocol.Lease(grant.wts, grant.rts)  # the new param version
 
 
 def make_lease_window_step(cfg, mesh, opt: adamw.AdamWConfig,
@@ -88,11 +103,12 @@ def make_lease_window_step(cfg, mesh, opt: adamw.AdamWConfig,
     def window_step(state, batches):
         bspec = jax.tree.map(lambda _: P(None, "pod"), batches)
         sspec = jax.tree.map(lambda _: P(), state)
-        return jax.shard_map(local_window, mesh=mesh,
-                             in_specs=(sspec, bspec),
-                             out_specs=(sspec, P()),
-                             axis_names={"pod"},
-                             check_vma=False)(state, batches)
+        import repro.sharding as sharding
+        return sharding.shard_map(local_window, mesh=mesh,
+                                  in_specs=(sspec, bspec),
+                                  out_specs=(sspec, P()),
+                                  axis_names={"pod"},
+                                  check_vma=False)(state, batches)
 
     return window_step
 

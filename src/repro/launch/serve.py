@@ -1,13 +1,18 @@
 """Serving launcher: batched requests through the lease-coherent server.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --requests 8
+
+The server obtains every prefix-KV lease from the sharded TSU fabric
+(--tsu-shards), the same service the trainer and benchmarks use.
 """
 import argparse
+import json
 
 import jax
 import numpy as np
 
 from repro import configs as cfgs
+from repro.coherence.fabric import FabricConfig, TSUFabric
 from repro.models import init_model
 from repro.runtime.server import Request, Server
 
@@ -19,12 +24,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tsu-shards", type=int, default=4)
+    ap.add_argument("--rd-lease", type=int, default=8)
+    ap.add_argument("--wr-lease", type=int, default=4)
     args = ap.parse_args()
 
     cfg = cfgs.SMOKE[args.arch]            # serving demo runs the smoke cfg
     params = init_model(cfg, jax.random.PRNGKey(0))
+    fabric = TSUFabric(FabricConfig(n_shards=args.tsu_shards,
+                                    rd_lease=args.rd_lease,
+                                    wr_lease=args.wr_lease))
     srv = Server(cfg, params, batch_size=args.batch,
-                 max_len=args.prompt_len + args.max_new + 8)
+                 max_len=args.prompt_len + args.max_new + 8, fabric=fabric)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -37,6 +48,7 @@ def main():
     for rid in sorted(out):
         print(f"req {rid}: {list(out[rid])}")
     print("lease-cache stats:", srv.cache_stats)
+    print("fabric stats:", json.dumps(srv.fabric_stats))
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@
 
 Requests are grouped into fixed-size decode batches; shared prompt prefixes
 hit the LeaseKVCache (HALCONE semantics: reuse without revalidation while the
-lease is live).  Single-process reference implementation of the multi-replica
-serving pattern; launch/serve.py drives it on the production mesh.
+lease is live).  All leases come from the coherence fabric — pass a shared
+``TSUFabric`` to run many Server replicas against one sharded TSU service.
+Single-process reference implementation of the multi-replica serving
+pattern; launch/serve.py drives it on the production mesh.
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.coherence.fabric import TSUFabric
 from repro.coherence.kv_lease import AuthoritativeStore, LeaseKVCache
 from repro.models import decode_step, init_cache, prefill
 from repro.sharding import NOSHARD
@@ -33,10 +36,13 @@ def _prefix_key(tokens: np.ndarray) -> str:
 
 class Server:
     def __init__(self, cfg, params, *, batch_size: int = 4,
-                 max_len: int = 128, store: Optional[AuthoritativeStore] = None):
+                 max_len: int = 128, store: Optional[AuthoritativeStore] = None,
+                 fabric: Optional[TSUFabric] = None, node_id: int = 0):
         self.cfg, self.params = cfg, params
         self.B, self.max_len = batch_size, max_len
-        self.kv = LeaseKVCache(store or AuthoritativeStore())
+        store = store or AuthoritativeStore(fabric=fabric, node_id=node_id)
+        self.fabric = store.fabric
+        self.kv = LeaseKVCache(store)
         self._prefill = jax.jit(
             lambda p, c, t: prefill(cfg, p, t, c, ctx=NOSHARD))
         self._decode = jax.jit(
@@ -79,3 +85,8 @@ class Server:
     @property
     def cache_stats(self):
         return dict(self.kv.stats)
+
+    @property
+    def fabric_stats(self):
+        """Fabric-wide telemetry (engine.COUNTERS names + service extras)."""
+        return self.fabric.stats.to_dict()

@@ -19,6 +19,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.coherence.fabric import FabricConfig, TSUFabric
+from repro.coherence.lease_sync import LeaseClock
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.steps import make_train_step
 from repro.models import init_model, model_shardings, model_spec
@@ -40,11 +42,18 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, cfg, mesh, opt: Optional[adamw.AdamWConfig] = None,
                  tcfg: TrainerConfig = TrainerConfig(),
-                 data: Optional[SyntheticLM] = None):
+                 data: Optional[SyntheticLM] = None,
+                 fabric: Optional[TSUFabric] = None):
         self.cfg, self.mesh, self.tcfg = cfg, mesh, tcfg
         self.opt = opt or adamw.AdamWConfig(total_steps=tcfg.total_steps)
         self.data = data
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        # every checkpoint publish is a parameter write-through on the
+        # coherence fabric: eval readers hold the previous version on a
+        # ckpt_period-step lease instead of being invalidated.
+        self.fabric = fabric or TSUFabric(FabricConfig(n_shards=1,
+                                                       max_in_flight=0))
+        self.param_clock = LeaseClock(fabric=self.fabric)
         self.events: List[Dict] = []
         self._ema = None
         self._build(mesh)
@@ -85,9 +94,15 @@ class Trainer:
             step += 1
             if step % self.tcfg.ckpt_period == 0 or step == self.tcfg.total_steps:
                 self.ckpt.save(step, state)
+                lease = self.param_clock.on_sync(self.tcfg.ckpt_period,
+                                                 version_tag=step)
+                self.events.append({"kind": "param_lease", "step": step,
+                                    "wts": int(lease.wts),
+                                    "rts": int(lease.rts)})
         self.ckpt.wait()
         return {"state": state, "losses": losses, "events": self.events,
-                "final_step": step}
+                "final_step": step,
+                "fabric_stats": self.fabric.stats.to_dict()}
 
     def resume(self, mesh=None, template: Optional[adamw.TrainState] = None,
                **kw) -> Dict[str, Any]:

@@ -1,0 +1,250 @@
+"""Coherence-fabric tests: sharded TSU service, two-tier client caches,
+write queue/fence, overflow reinit, and the kv_lease/lease_sync adapters."""
+import dataclasses
+
+import pytest
+
+from repro.core import engine, protocol
+from repro.coherence.fabric import (FabricConfig, ReplicaCache, SharedCache,
+                                    TSUFabric, WriteQueue, stable_hash)
+from repro.coherence.kv_lease import AuthoritativeStore, LeaseKVCache
+from repro.coherence.lease_sync import LeaseClock
+
+
+def two_tier(rd=8, wr=4, **kw):
+    fabric = TSUFabric(FabricConfig(n_shards=4, rd_lease=rd, wr_lease=wr,
+                                    max_in_flight=kw.pop("max_in_flight", 0),
+                                    **kw))
+    node = SharedCache(fabric, node_id=0)
+    return fabric, node, ReplicaCache(node)
+
+
+# ------------------------------------------------------------- TSU rules
+def test_write_bumps_memts_fig5_plus_one():
+    """Fig. 5 convention: a write from memts=m grants wts=m+1, rts=m+wr."""
+    fabric = TSUFabric(FabricConfig(n_shards=1, wr_lease=5, rd_lease=10))
+    g1 = fabric.write("x", "a")
+    assert (g1.wts, g1.rts) == (1, 5)
+    assert fabric.memts("x") == 5
+    g2 = fabric.write("x", "b")               # memts=5 -> wts=6, rts=10
+    assert (g2.wts, g2.rts) == (6, 10)
+    g3 = fabric.read("x")                     # memts=10 -> [10, 20]
+    assert (g3.wts, g3.rts) == (10, 20)
+    assert fabric.memts("x") == 20
+
+
+def test_shard_routing_stable_and_spread():
+    f1 = TSUFabric(FabricConfig(n_shards=8))
+    f2 = TSUFabric(FabricConfig(n_shards=8))
+    keys = [f"key/{i}" for i in range(256)]
+    routes = [f1.shard_of(k) for k in keys]
+    assert routes == [f2.shard_of(k) for k in keys]           # deterministic
+    assert routes == [stable_hash(k) % 8 for k in keys]       # documented fn
+    assert len(set(routes)) == 8                              # actually spreads
+    for k in keys:
+        f1.write(k, k)
+        assert k in f1.shards[f1.shard_of(k)].entries         # lands at home
+
+
+def test_tsu_victim_eviction_reinitializes():
+    fabric = TSUFabric(FabricConfig(n_shards=1, tsu_capacity=4, wr_lease=4))
+    for i in range(8):
+        fabric.write(f"k{i}", i)
+    assert len(fabric.shards[0].entries) == 4
+    assert fabric.stats.tsu_evictions == 4
+    # an evicted key restarts from memts=0: first write grants wts=1
+    assert fabric.write("k0", "again").wts == 1
+
+
+# ------------------------------------------------------- overflow reinit
+def test_overflow_reinit_regression_host_stores():
+    """Host-side stores used to let memts exceed TS_MAX unbounded; the
+    fabric applies the 16-bit reinit on every grant."""
+    store = AuthoritativeStore(rd_lease=8, wr_lease=5000)
+    for i in range(40):
+        store.write("p", i)
+    assert store.blocks["p"].memts <= protocol.TS_MAX
+    assert store.fabric.stats.overflow_reinits >= 2
+
+    clock = LeaseClock()
+    for _ in range(40):
+        clock.on_sync(5000)
+    assert clock.memts <= protocol.TS_MAX
+
+    big = TSUFabric(FabricConfig(n_shards=1, rd_lease=protocol.TS_MAX))
+    big.write("x", 0)
+    g = big.read("x")                     # would land past TS_MAX -> reinit
+    g = big.read("x")
+    assert big.memts("x") <= protocol.TS_MAX
+    assert g.rts <= protocol.TS_MAX
+
+
+# ----------------------------------------------------- two-tier caching
+def test_lease_expiry_forces_refetch_and_stale_served_locally():
+    fabric, node, r = two_tier(rd=8, wr=4)
+    w = ReplicaCache(node)
+    w.put("p", "v1")
+    assert r.get("p")[0] == "v1"
+    w.put("p", "v2")
+    # stale read within the lease is served locally (no MM traffic)
+    mm_before = fabric.stats.l2_to_mm
+    assert r.get("p")[0] == "v1"
+    assert fabric.stats.l2_to_mm == mm_before
+    assert r.stats.l1_hits == 1
+    # clock past rts -> self-invalidation -> refetch returns the new version
+    r.cts = fabric.memts("p") + 1
+    node.cts = fabric.memts("p") + 1
+    assert r.get("p")[0] == "v2"
+    assert r.stats.coh_miss_l1 >= 1
+    assert fabric.stats.inval_msgs == 0          # never any invalidations
+
+
+def test_replica_miss_hits_node_shared_tier():
+    fabric, node, r1 = two_tier()
+    r2 = ReplicaCache(node)
+    r1.put("p", "v1")
+    mm_before = fabric.stats.l2_to_mm
+    assert r2.get("p")[0] == "v1"                # L1 miss, L2 hit: no MM trip
+    assert fabric.stats.l2_to_mm == mm_before
+    assert r2.stats.l2_hits == 1 and r2.stats.compulsory == 1
+
+
+def test_capacity_eviction_uses_victim_way():
+    fabric = TSUFabric(FabricConfig(n_shards=1, replica_sets=1,
+                                    replica_ways=2, max_in_flight=0))
+    node = SharedCache(fabric)
+    r = ReplicaCache(node)
+    for i in range(4):
+        r.put(f"k{i}", i)
+    assert r.stats.capacity_evictions >= 2       # 1 set x 2 ways
+    # most-recently-used lines survive
+    assert r.get("k3")[0] == 3
+    assert r.stats.l1_hits == 1
+
+
+# ------------------------------------------------------ write queue/fence
+def test_write_queue_bounded_in_flight_and_fence():
+    fabric = TSUFabric(FabricConfig(n_shards=2, max_in_flight=4))
+    node = SharedCache(fabric)
+    r = ReplicaCache(node)
+    for i in range(3):
+        r.put(f"k{i}", i)
+    assert len(node.queue) == 3                  # posted, not yet through
+    assert fabric.memts("k0") == 0
+    assert r.get("k0")[0] == 0                   # store-buffer forwarding
+    for i in range(3, 8):
+        r.put(f"k{i}", i)                        # exceeds bound -> drains FIFO
+    assert len(node.queue) == 4
+    assert fabric.memts("k0") > 0                # oldest drained first
+    fabric.barrier()
+    assert len(node.queue) == 0
+    assert all(fabric.memts(f"k{i}") > 0 for i in range(8))
+    assert fabric.stats.fences == 1
+
+
+def test_fence_jumps_clocks_to_global_max():
+    fabric, node, r1 = two_tier()
+    r2 = ReplicaCache(node)
+    r1.put("p", "v1")
+    assert r1.cts > r2.cts                       # writer's clock advanced
+    fabric.barrier()
+    assert r2.cts == r1.cts == node.cts          # kernel-boundary jump
+    # post-fence, r2 cannot be served a pre-write lease it never held
+    assert r2.get("p")[0] == "v1"
+
+
+# ------------------------------------------------------------ telemetry
+def test_fabric_stats_match_engine_counters():
+    from repro.coherence.fabric.stats import FabricStats
+    names = {f.name for f in dataclasses.fields(FabricStats)}
+    assert set(engine.COUNTERS) <= names
+    fabric, node, r = two_tier()
+    r.put("a", 1)
+    r.get("a")
+    view = fabric.stats.engine_view()
+    assert list(view) == list(engine.COUNTERS)
+    assert view["writes"] == 1 and view["reads"] == 1
+    assert view["wb_evictions"] == 0 and view["inval_msgs"] == 0
+
+
+# ------------------------------------------------------------- adapters
+def test_kv_lease_adapter_routes_through_fabric():
+    store = AuthoritativeStore(rd_lease=8, wr_lease=4)
+    kv = LeaseKVCache(store, capacity=16)
+    kv.put("p", "v1")
+    assert store.fabric.stats.write_throughs == 1
+    assert kv.get("p")[0] == "v1"
+    assert kv.stats["hits"] == 1
+    # legacy surface preserved: blocks view + store read/write
+    assert store.blocks["p"].version == 1
+    wts, rts = store.write("p", "v2")
+    assert wts == store.blocks["p"].memts - 4 + 1
+
+
+def test_store_write_visible_after_reader_fence():
+    """Upstream recompute via store.write must reach fenced readers: the
+    grant is adopted into the node tier (clock advance), so the shared
+    line cannot stay 'valid' forever."""
+    store = AuthoritativeStore(rd_lease=8, wr_lease=4)
+    kv = LeaseKVCache(store)
+    kv.put("p", "v1")
+    assert kv.get("p")[0] == "v1"
+    store.write("p", "v2")                     # bypasses the replicas
+    kv.cts = store.blocks["p"].memts + 1       # reader fence
+    assert kv.get("p")[0] == "v2"
+
+
+def test_store_lease_args_conflict_with_fabric_raises():
+    fabric = TSUFabric(FabricConfig(n_shards=1, rd_lease=8, wr_lease=4))
+    with pytest.raises(ValueError, match="conflict"):
+        AuthoritativeStore(rd_lease=100, fabric=fabric)
+    s = AuthoritativeStore(rd_lease=8, wr_lease=4, fabric=fabric)
+    assert s.rd_lease == 8                     # matching args are fine
+
+
+def test_fabric_registrations_are_weak():
+    import gc
+    fabric = TSUFabric(FabricConfig(n_shards=1, max_in_flight=0))
+    node = SharedCache(fabric)
+    r = ReplicaCache(node)
+    r.put("k", 1)
+    del r, node
+    gc.collect()
+    assert fabric.barrier() == 0               # dead caches pruned, no crash
+    assert all(ref() is None for ref in fabric._caches) or not fabric._caches
+
+
+def test_pending_write_version_is_none_until_drain():
+    fabric = TSUFabric(FabricConfig(n_shards=1, max_in_flight=4))
+    r = ReplicaCache(SharedCache(fabric))
+    r.put("k", "v")
+    assert r.get("k") == ("v", None)           # in flight: no fake version
+    r.fence()
+    assert r.get("k") == ("v", 1)
+
+
+def test_lease_clock_adapter_memts_and_lease():
+    clock = LeaseClock()
+    lease = clock.on_sync(4)
+    assert (int(lease.wts), int(lease.rts)) == (1, 4)
+    assert clock.memts == 4
+    lease = clock.on_sync(4)
+    assert int(lease.wts) == 5                    # Fig. 5 +1 ordering
+
+
+def test_server_and_trainer_share_fabric_surface():
+    """Both runtimes expose the same FabricStats counter names."""
+    import jax
+    import numpy as np
+    from repro import configs as cfgs
+    from repro.models import init_model
+    from repro.runtime.server import Request, Server
+
+    cfg = cfgs.SMOKE["smollm-360m"]
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    fabric = TSUFabric(FabricConfig(n_shards=2))
+    srv = Server(cfg, params, batch_size=2, max_len=32, fabric=fabric)
+    prompt = np.arange(2, 10).astype(np.int32)
+    srv.serve([Request(rid=0, prompt=prompt, max_new=2)])
+    assert srv.fabric_stats["write_throughs"] >= 1
+    assert set(engine.COUNTERS) <= set(srv.fabric_stats)

@@ -1,5 +1,14 @@
-"""shard_map MoE dispatch == GSPMD global-scatter dispatch (8 fake devices,
-subprocess so the device-count flag lands before jax init)."""
+"""shard_map MoE dispatch == the GSPMD dispatch math, judged against the
+unsharded reference (8 fake devices, subprocess so the device-count flag
+lands before jax init).
+
+The comparison anchor is `_moe_gspmd` run WITHOUT a mesh: on this
+container's jax 0.4.x, the GSPMD partitioner miscompiles the global-scatter
+dispatch on a mixed (data x model) mesh (outputs off by ~40% of their
+magnitude vs. the same math unsharded — see DESIGN.md §4), so comparing the
+two mesh paths to each other would test the partitioner bug, not the
+dispatch.  The shard_map path with explicit collectives is exact.
+"""
 import subprocess
 import sys
 
@@ -11,7 +20,7 @@ import dataclasses
 import jax, jax.numpy as jnp, numpy as np
 from repro import configs as cfgs
 from repro.models import moe as moe_mod
-from repro.sharding import ShardCtx
+from repro.sharding import ShardCtx, NOSHARD
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 ctx = ShardCtx(mesh)
 cfg = dataclasses.replace(cfgs.SMOKE["deepseek-v2-236b"], n_experts=8,
@@ -20,10 +29,14 @@ spec = moe_mod.moe_spec(cfg)
 from repro.models.params import materialize
 p = materialize(spec, jax.random.PRNGKey(0))
 h = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
-o1, a1 = jax.jit(lambda p, h: moe_mod._moe_gspmd(cfg, p, h, ctx))(p, h)
+ref, aref = jax.jit(lambda p, h: moe_mod._moe_gspmd(cfg, p, h, NOSHARD))(p, h)
 o2, a2 = jax.jit(lambda p, h: moe_mod._moe_shard_map(cfg, p, h, ctx))(p, h)
-np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
-np.testing.assert_allclose(float(a1), float(a2), rtol=0.3)  # aux: local approx
+np.testing.assert_allclose(np.asarray(ref), np.asarray(o2), rtol=2e-4, atol=2e-4)
+np.testing.assert_allclose(float(aref), float(a2), rtol=0.3)  # aux: local approx
+# single-mesh-axis GSPMD runs are NOT hit by the partitioner bug; pin that
+mesh1 = jax.make_mesh((1, 8), ("data", "model"))
+o1, a1 = jax.jit(lambda p, h: moe_mod._moe_gspmd(cfg, p, h, ShardCtx(mesh1)))(p, h)
+np.testing.assert_allclose(np.asarray(ref), np.asarray(o1), rtol=2e-4, atol=2e-4)
 print("MOE_MATCH_OK")
 '''
 

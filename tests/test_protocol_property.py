@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) for the HALCONE protocol invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install repro[test]); protocol invariants skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import protocol, simulate, sm_wt_halcone
 from repro.core.engine import FENCE, NOP, READ, WRITE
