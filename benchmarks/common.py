@@ -1,10 +1,20 @@
-"""Shared benchmark helpers: timing, CSV rows, artifact caching."""
+"""Shared benchmark helpers: timing, CSV rows, artifact caching, and the
+batched ``sweep()`` entrypoint every figure script drives (DESIGN.md §5).
+
+Artifacts are JSON files under ``benchmarks/artifacts/`` wrapped in an
+envelope ``{"__meta__": {...}, "data": ...}``.  The meta block records a
+hash of the emitting script (plus this harness), so committed artifacts
+self-invalidate when the code that produced them changes — a stale artifact
+can no longer mask a code change.  ``--force`` refreshes unconditionally.
+"""
 from __future__ import annotations
 
+import hashlib
+import inspect
 import json
 import pathlib
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
 ART.mkdir(parents=True, exist_ok=True)
@@ -22,13 +32,57 @@ def rows() -> List[str]:
     return list(_rows)
 
 
-def cached(name: str, fn: Callable[[], Dict], force: bool = False) -> Dict:
-    """Run-once artifact cache so re-runs of the harness are cheap."""
+def _fingerprint(fn: Callable, script: Optional[str] = None) -> str:
+    """Hash of the emitting script (defaults to fn's source file), this
+    harness, and the simulator core — the artifact's validity key.  An
+    engine/kernel/trace change invalidates every cached figure, not just
+    edits to the benchmark script itself."""
+    paths = []
+    src = script or inspect.getsourcefile(fn)
+    if src:
+        paths.append(pathlib.Path(src))
+    paths.append(pathlib.Path(__file__))
+    try:
+        import repro.core
+        import repro.kernels
+        for pkg in (repro.core, repro.kernels):
+            paths.extend(sorted(pathlib.Path(pkg.__file__).parent
+                                .glob("*.py")))
+    except ImportError:
+        pass
+    h = hashlib.sha256()
+    for p in paths:
+        try:
+            h.update(p.read_bytes())
+        except OSError:
+            pass
+    return h.hexdigest()[:16]
+
+
+def cached(name: str, fn: Callable[[], Dict], force: bool = False,
+           script: Optional[str] = None) -> Dict:
+    """Run-once artifact cache keyed on the emitting script's content.
+
+    The artifact is recomputed when (a) it doesn't exist, (b) ``force`` is
+    set, or (c) the script that emitted it (or this harness) has changed
+    since it was written — stale committed artifacts no longer mask code
+    changes.  Pre-envelope artifacts (bare JSON) are treated as stale."""
     path = ART / f"{name}.json"
+    fp = _fingerprint(fn, script)
     if path.exists() and not force:
-        return json.loads(path.read_text())
+        try:
+            blob = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            blob = None
+        if (isinstance(blob, dict) and "__meta__" in blob
+                and blob["__meta__"].get("script_sha") == fp):
+            return blob["data"]
     out = fn()
-    path.write_text(json.dumps(out, indent=1))
+    path.write_text(json.dumps(
+        {"__meta__": {"script_sha": fp,
+                      "script": pathlib.Path(
+                          script or inspect.getsourcefile(fn) or "?").name},
+         "data": out}, indent=1))
     return out
 
 
@@ -36,3 +90,67 @@ def timed(fn, *args) -> tuple:
     t0 = time.time()
     out = fn(*args)
     return out, (time.time() - t0) * 1e6
+
+
+def sweep(configs: Sequence[Tuple[str, object]],
+          named_traces: Dict[str, tuple], *,
+          measure_sequential: bool = True) -> Dict:
+    """The shared figure-engine entrypoint: run a (config x benchmark) grid
+    through ``core.engine.sweep`` — ONE batched jit for the whole matrix —
+    and optionally time the old per-cell sequential loop for comparison.
+
+    configs: [(display_name, SystemConfig)]; named_traces: {bench: (ops
+    [NC, T], addrs)}.  Returns a JSON-able dict: per-config cycles,
+    counters (incl. L1<->L2 / L2<->MM transactions), and wall-clock of
+    batched vs sequential driving.  Cold times include compilation — the
+    realistic "run the figures from scratch" cost."""
+    import jax
+
+    from repro.core import engine, traces
+
+    cnames = [n for n, _ in configs]
+    cfgs = [c for _, c in configs]
+    bnames = list(named_traces)
+    ops_b, addrs_b = traces.pack_batch([named_traces[b] for b in bnames])
+
+    t0 = time.time()
+    res = engine.sweep(cfgs, ops_b, addrs_b)
+    jax.block_until_ready(res)
+    batched_cold = time.time() - t0
+    t0 = time.time()
+    res = engine.sweep(cfgs, ops_b, addrs_b)
+    jax.block_until_ready(res)
+    batched_steady = time.time() - t0
+
+    out = {
+        "configs": cnames,
+        "benchmarks": bnames,
+        "cycles": [[float(res["cycles"][ci, bi]) for bi in range(len(bnames))]
+                   for ci in range(len(cnames))],
+        "makespan_max": [[float(res["makespan_max"][ci, bi])
+                          for bi in range(len(bnames))]
+                         for ci in range(len(cnames))],
+        "counters": {k: [[float(res["counters"][k][ci, bi])
+                          for bi in range(len(bnames))]
+                         for ci in range(len(cnames))]
+                     for k in res["counters"]},
+        "wall": {"batched_cold_s": batched_cold,
+                 "batched_steady_s": batched_steady},
+    }
+
+    if measure_sequential:
+        t0 = time.time()
+        seq = [[float(engine.simulate(c, *named_traces[b])["cycles"])
+                for b in bnames] for c in cfgs]
+        sequential_cold = time.time() - t0
+        t0 = time.time()   # second pass reuses the per-cell jits (steady)
+        seq = [[float(engine.simulate(c, *named_traces[b])["cycles"])
+                for b in bnames] for c in cfgs]
+        sequential_steady = time.time() - t0
+        out["sequential_cycles"] = seq
+        out["wall"]["sequential_cold_s"] = sequential_cold
+        out["wall"]["sequential_steady_s"] = sequential_steady
+        out["wall"]["batched_speedup_cold"] = sequential_cold / batched_cold
+        out["wall"]["batched_speedup_steady"] = \
+            sequential_steady / max(batched_steady, 1e-9)
+    return out

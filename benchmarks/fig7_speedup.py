@@ -1,6 +1,12 @@
 """Fig 7(a,b,c): 5 MGPU configs x 11 standard benchmarks — speedups vs
 RDMA-WB-NC, plus L2<->MM and L1<->L2 transaction counts.
 
+Driven by the batched sweep engine (DESIGN.md §5): the whole 5x11 matrix is
+produced by ONE jit (``benchmarks.common.sweep`` -> ``core.engine.sweep``),
+with the old per-cell sequential loop timed alongside for the wall-clock
+comparison.  ``mini=True`` is the CI footprint: 2 configs x 2 benchmarks at
+small ROUNDS, same code path.
+
 Paper targets (geomean over benchmarks, 4 GPUs):
   RDMA-WB-C-HMG 1.5x | SM-WB-NC 3.9x | SM-WT-NC 4.6x | SM-WT-C-HALCONE 4.6x
   (HALCONE within ~1% of SM-WT-NC; ~+1% traffic)
@@ -9,8 +15,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cached, emit, timed
-from repro.core import simulate, traces
+from benchmarks import common
+from benchmarks.common import cached, emit
+from repro.core import traces
 from repro.core.sysconfig import (rdma_wb_hmg, rdma_wb_nc, sm_wb_nc,
                                   sm_wt_halcone, sm_wt_nc)
 
@@ -23,6 +30,11 @@ CONFIGS = [
     ("SM-WT-NC", sm_wt_nc),
     ("SM-WT-C-HALCONE", sm_wt_halcone),
 ]
+# CI footprint: baseline + HALCONE over one compute- and one memory-bound
+# benchmark, short traces — exercises the identical sweep path.
+MINI_CONFIGS = (0, 4)
+MINI_BENCHES = ["aes", "mm"]
+MINI_ROUNDS = 256
 
 
 def h2d_setup_cycles(cfg, touched_blocks: int) -> float:
@@ -33,58 +45,80 @@ def h2d_setup_cycles(cfg, touched_blocks: int) -> float:
     return touched_blocks * 64 / 32.0  # 32 B/cycle PCIe4
 
 
-def run_all(force: bool = False):
+def run_all(force: bool = False, mini: bool = False):
+    benches = MINI_BENCHES if mini else list(traces.STANDARD)
+    cfg_rows = [CONFIGS[i] for i in MINI_CONFIGS] if mini else CONFIGS
+    rounds = MINI_ROUNDS if mini else ROUNDS
+
     def compute():
-        out = {}
-        for bname, bench in traces.STANDARD.items():
-            base = sm_wt_halcone(**GEOM)
-            ops, addrs = traces.standard_trace(base, bench, ROUNDS)
-            touched = len(np.unique(addrs[(ops == 1) | (ops == 2)]))
-            out[bname] = {}
-            for cname, mk in CONFIGS:
-                cfg = mk(**GEOM)
-                r, us = timed(simulate, cfg, ops, addrs)
-                cyc = float(r["cycles"]) + h2d_setup_cycles(cfg, touched)
-                out[bname][cname] = {
-                    "cycles": cyc, "us": us,
-                    "l1_to_l2": float(r["counters"]["l1_to_l2"]),
-                    "l2_to_mm": float(r["counters"]["l2_to_mm"]),
-                    "coh_miss_l1": float(r["counters"]["coh_miss_l1"]),
-                }
+        base = sm_wt_halcone(**GEOM)
+        named = {b: traces.standard_trace(base, traces.STANDARD[b], rounds)
+                 for b in benches}
+        out = common.sweep([(n, mk(**GEOM)) for n, mk in cfg_rows], named)
+        # fold in the host->device staging cost (host-side, per config row)
+        touched = {b: len(np.unique(named[b][1][(named[b][0] == 1)
+                                                | (named[b][0] == 2)]))
+                   for b in benches}
+        for ci, (_, mk) in enumerate(cfg_rows):
+            cfg = mk(**GEOM)
+            for bi, b in enumerate(out["benchmarks"]):
+                h2d = h2d_setup_cycles(cfg, touched[b])
+                out["cycles"][ci][bi] += h2d
+                if "sequential_cycles" in out:
+                    out["sequential_cycles"][ci][bi] += h2d
         return out
 
-    return cached("fig7_speedup", compute, force)
+    name = "fig7_sweep_mini" if mini else "fig7_sweep"
+    return cached(name, compute, force, script=__file__)
 
 
-def main(force: bool = False):
-    data = run_all(force)
-    speedups = {c: [] for c, _ in CONFIGS[1:]}
-    for bname, per_cfg in data.items():
-        base = per_cfg["RDMA-WB-NC"]["cycles"]
-        for cname, _ in CONFIGS[1:]:
-            s = base / per_cfg[cname]["cycles"]
-            speedups[cname].append(s)
-            emit(f"fig7a/{bname}/{cname}", per_cfg[cname]["us"],
-                 f"speedup={s:.2f}x")
-    for cname, ss in speedups.items():
-        gm = float(np.exp(np.mean(np.log(ss))))
+def main(force: bool = False, mini: bool = False):
+    data = run_all(force, mini)
+    cnames, bnames = data["configs"], data["benchmarks"]
+    cyc = np.asarray(data["cycles"])                     # [C, B]
+    base = cyc[cnames.index("RDMA-WB-NC")]
+    geomeans = {}
+    for ci, cname in enumerate(cnames):
+        if cname == "RDMA-WB-NC":
+            continue
+        sp = base / cyc[ci]
+        for bi, b in enumerate(bnames):
+            emit(f"fig7a/{b}/{cname}", 0.0, f"speedup={sp[bi]:.2f}x")
+        gm = float(np.exp(np.mean(np.log(sp))))
+        geomeans[cname] = gm
         emit(f"fig7a/geomean/{cname}", 0.0, f"speedup={gm:.2f}x")
-    # HALCONE overhead vs SM-WT-NC (paper: ~1%)
-    ovh, tr = [], []
-    for bname, per_cfg in data.items():
-        ovh.append(per_cfg["SM-WT-C-HALCONE"]["cycles"]
-                   / per_cfg["SM-WT-NC"]["cycles"] - 1)
-        tr.append(per_cfg["SM-WT-C-HALCONE"]["l1_to_l2"]
-                  / max(per_cfg["SM-WT-NC"]["l1_to_l2"], 1) - 1)
-    emit("fig7a/halcone_overhead_vs_smwtnc", 0.0,
-         f"mean={np.mean(ovh)*100:.2f}%;max={np.max(ovh)*100:.2f}%")
-    emit("fig7c/halcone_extra_l1l2_traffic", 0.0,
-         f"mean={np.mean(tr)*100:.2f}%")
-    # Fig 7b: WB vs WT L2->MM transactions (paper: WB ~22.7% fewer)
-    wb = np.mean([data[b]["SM-WB-NC"]["l2_to_mm"]
-                  / max(data[b]["SM-WT-NC"]["l2_to_mm"], 1)
-                  for b in data])
-    emit("fig7b/wb_l2mm_vs_wt", 0.0, f"ratio={wb:.3f}")
+    # paper's geomean ordering: HALCONE ~ SM-WT-NC > SM-WB-NC > HMG > RDMA
+    if not mini:
+        order_ok = (abs(geomeans["SM-WT-C-HALCONE"] / geomeans["SM-WT-NC"]
+                        - 1) < 0.05
+                    and geomeans["SM-WT-NC"] > geomeans["SM-WB-NC"]
+                    > geomeans["RDMA-WB-C-HMG"] > 1.0)
+        emit("fig7a/ordering", 0.0,
+             f"paper_order={'OK' if order_ok else 'VIOLATED'}")
+        # HALCONE overhead vs SM-WT-NC (paper: ~1%)
+        hc, wt = cyc[cnames.index("SM-WT-C-HALCONE")], \
+            cyc[cnames.index("SM-WT-NC")]
+        ovh = hc / wt - 1
+        l1l2 = np.asarray(data["counters"]["l1_to_l2"])
+        tr = l1l2[cnames.index("SM-WT-C-HALCONE")] \
+            / np.maximum(l1l2[cnames.index("SM-WT-NC")], 1) - 1
+        emit("fig7a/halcone_overhead_vs_smwtnc", 0.0,
+             f"mean={np.mean(ovh)*100:.2f}%;max={np.max(ovh)*100:.2f}%")
+        emit("fig7c/halcone_extra_l1l2_traffic", 0.0,
+             f"mean={np.mean(tr)*100:.2f}%")
+        # Fig 7b: WB vs WT L2->MM transactions (paper: WB ~22.7% fewer)
+        l2mm = np.asarray(data["counters"]["l2_to_mm"])
+        wb = np.mean(l2mm[cnames.index("SM-WB-NC")]
+                     / np.maximum(l2mm[cnames.index("SM-WT-NC")], 1))
+        emit("fig7b/wb_l2mm_vs_wt", 0.0, f"ratio={wb:.3f}")
+    wall = data["wall"]
+    emit("fig7/wall_batched_vs_sequential", wall["batched_cold_s"] * 1e6,
+         f"batched_cold={wall['batched_cold_s']:.1f}s;"
+         f"batched_steady={wall['batched_steady_s']:.1f}s;"
+         f"sequential_cold={wall.get('sequential_cold_s', 0):.1f}s;"
+         f"sequential_steady={wall.get('sequential_steady_s', 0):.1f}s;"
+         f"speedup_cold={wall.get('batched_speedup_cold', 0):.2f}x;"
+         f"speedup_steady={wall.get('batched_speedup_steady', 0):.2f}x")
     return data
 
 

@@ -1,12 +1,17 @@
 """Fig 8: strong-scaling of SM-WT-C-HALCONE with GPU count (1..16, 32 CUs)
 and CU count (32/48/64 at 4 GPUs).  Paper: 1.76/2.74/4.05/5.43x for
-2/4/8/16 GPUs; 1.12/1.24x for 48/64 CUs."""
+2/4/8/16 GPUs; 1.12/1.24x for 48/64 CUs.
+
+Each scaling point is one batched sweep (the 11-benchmark axis vmapped in a
+single jit, DESIGN.md §5); points differ in CU-grid shape so they compile
+separately by construction."""
 import argparse
 
 import numpy as np
 
-from benchmarks.common import cached, emit, timed
-from repro.core import simulate, traces
+from benchmarks import common
+from benchmarks.common import cached, emit
+from repro.core import traces
 from repro.core.sysconfig import sm_wt_halcone
 
 BASE_ROUNDS = 1024          # at the 4x32 reference point
@@ -24,62 +29,67 @@ def amdahl(speedup_sim: float, frac: float) -> float:
     return 1.0 / (frac + (1.0 - frac) / max(speedup_sim, 1e-9))
 
 
+def _point(cfg, rounds):
+    """One scaling point: all 11 benchmarks batched through one jit."""
+    named = {b: traces.standard_trace(cfg, traces.STANDARD[b], rounds)
+             for b in BENCHES}
+    out = common.sweep([(cfg.name, cfg)], named, measure_sequential=False)
+    return {"benchmarks": out["benchmarks"],
+            "cycles": out["cycles"][0],
+            "wall": out["wall"]}
+
+
 def run_gpu(force=False):
     def compute():
         out = {}
-        for bname in BENCHES:
-            bench = traces.STANDARD[bname]
-            out[bname] = {}
-            for g in (1, 2, 4, 8, 16):
-                cfg = sm_wt_halcone(n_gpus=g, cus_per_gpu=32)
-                rounds = max(128, BASE_ROUNDS * 4 // g)
-                ops, addrs = traces.standard_trace(cfg, bench, rounds)
-                r, us = timed(simulate, cfg, ops, addrs)
-                out[bname][g] = {"cycles": float(r["cycles"]), "us": us}
+        for g in (1, 2, 4, 8, 16):
+            cfg = sm_wt_halcone(n_gpus=g, cus_per_gpu=32)
+            rounds = max(128, BASE_ROUNDS * 4 // g)
+            out[str(g)] = _point(cfg, rounds)
         return out
 
-    return cached("fig8_gpu_scaling", compute, force)
+    return cached("fig8_gpu_scaling", compute, force, script=__file__)
 
 
 def run_cu(force=False):
     def compute():
         out = {}
-        for bname in BENCHES:
-            bench = traces.STANDARD[bname]
-            out[bname] = {}
-            for cu in (32, 48, 64):
-                cfg = sm_wt_halcone(n_gpus=4, cus_per_gpu=cu)
-                rounds = max(128, BASE_ROUNDS * 32 // cu)
-                ops, addrs = traces.standard_trace(cfg, bench, rounds)
-                r, us = timed(simulate, cfg, ops, addrs)
-                out[bname][cu] = {"cycles": float(r["cycles"]), "us": us}
+        for cu in (32, 48, 64):
+            cfg = sm_wt_halcone(n_gpus=4, cus_per_gpu=cu)
+            rounds = max(128, BASE_ROUNDS * 32 // cu)
+            out[str(cu)] = _point(cfg, rounds)
         return out
 
-    return cached("fig8_cu_scaling", compute, force)
+    return cached("fig8_cu_scaling", compute, force, script=__file__)
+
+
+def _cycles(point, bench):
+    return point["cycles"][point["benchmarks"].index(bench)]
 
 
 def main(axis="both", force=False):
-    def get(d, key):
-        return d[str(key)] if str(key) in d else d[key]
-
+    data = {}
     if axis in ("gpu", "both"):
-        data = run_gpu(force)
+        data["gpu"] = run_gpu(force)
         for g in (2, 4, 8, 16):
-            sp = [amdahl(get(data[b], 1)["cycles"] / get(data[b], g)["cycles"],
-                         SERIAL_FRAC[b]) for b in data]
+            sp = [amdahl(_cycles(data["gpu"]["1"], b)
+                         / _cycles(data["gpu"][str(g)], b),
+                         SERIAL_FRAC[b]) for b in BENCHES]
             emit(f"fig8a/gpus{g}", 0.0,
                  f"speedup={float(np.exp(np.mean(np.log(sp)))):.2f}x")
     if axis in ("cu", "both"):
-        data = run_cu(force)
+        data["cu"] = run_cu(force)
         for cu in (48, 64):
-            sp = [amdahl(get(data[b], 32)["cycles"] / get(data[b], cu)["cycles"],
-                         SERIAL_FRAC[b]) for b in data]
+            sp = [amdahl(_cycles(data["cu"]["32"], b)
+                         / _cycles(data["cu"][str(cu)], b),
+                         SERIAL_FRAC[b]) for b in BENCHES]
             emit(f"fig8bc/cus{cu}", 0.0,
                  f"speedup={float(np.exp(np.mean(np.log(sp)))):.2f}x")
+    return data
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--axis", default="both")
-    ap.parse_args()
-    main()
+    args = ap.parse_args()
+    main(axis=args.axis)

@@ -1,10 +1,13 @@
 """Fig 9: Xtreme stress suite — SM-WT-C-HALCONE vs SM-WT-NC across vector
 sizes.  Paper: worst-case degradation 14.3% (X1) / 12.1% (X2) / 16.8% (X3)
-at 192 KB vectors, shrinking toward ~0.6% as capacity misses take over."""
+at 192 KB vectors, shrinking toward ~0.6% as capacity misses take over.
+
+All 9 (variant, size) traces are NOP-padded into one [B, NC, R] batch and
+both configs swept in one jit (DESIGN.md §5)."""
 import numpy as np
 
-from benchmarks.common import cached, emit, timed
-from repro.core import simulate
+from benchmarks import common
+from benchmarks.common import cached, emit
 from repro.core.sysconfig import sm_wt_halcone, sm_wt_nc
 from repro.core.traces import XtremeSpec, xtreme
 
@@ -16,31 +19,38 @@ SYS = dict(n_gpus=4, cus_per_gpu=32)
 
 def run_all(force=False):
     def compute():
-        out = {}
+        base = sm_wt_halcone(**SYS)
+        named = {}
         for variant in (1, 2, 3):
-            out[f"xtreme{variant}"] = {}
             for nb, reps, label in SIZES:
-                spec = XtremeSpec(variant, nb, reps)
-                base = sm_wt_halcone(**SYS)
-                ops, addrs = xtreme(base, spec)
-                rh, us = timed(simulate, sm_wt_halcone(**SYS), ops, addrs)
-                rn, _ = timed(simulate, sm_wt_nc(**SYS), ops, addrs)
-                slow = float(rh["cycles"]) / float(rn["cycles"]) - 1
-                out[f"xtreme{variant}"][label] = {
-                    "slowdown_pct": slow * 100, "us": us,
-                    "coh_miss_l1": float(rh["counters"]["coh_miss_l1"]),
-                }
-        return out
+                named[f"xtreme{variant}/{label}"] = \
+                    xtreme(base, XtremeSpec(variant, nb, reps))
+        out = common.sweep([("SM-WT-C-HALCONE", sm_wt_halcone(**SYS)),
+                            ("SM-WT-NC", sm_wt_nc(**SYS))], named,
+                           measure_sequential=False)
+        hc, nc = out["cycles"]
+        coh = out["counters"]["coh_miss_l1"][0]
+        res = {}
+        for bi, cell in enumerate(out["benchmarks"]):
+            variant, label = cell.split("/")
+            res.setdefault(variant, {})[label] = {
+                "slowdown_pct": (hc[bi] / nc[bi] - 1) * 100,
+                "coh_miss_l1": coh[bi],
+            }
+        res["wall"] = out["wall"]
+        return res
 
-    return cached("fig9_xtreme", compute, force)
+    return cached("fig9_xtreme", compute, force, script=__file__)
 
 
 def main(force=False):
     data = run_all(force)
     worst = 0.0
     for variant, sizes in data.items():
+        if variant == "wall":
+            continue
         for label, rec in sizes.items():
-            emit(f"fig9/{variant}/{label}", rec["us"],
+            emit(f"fig9/{variant}/{label}", 0.0,
                  f"halcone_slowdown={rec['slowdown_pct']:.1f}%")
             worst = max(worst, rec["slowdown_pct"])
     emit("fig9/worst_case", 0.0, f"slowdown={worst:.1f}% (paper: 16.8%)")

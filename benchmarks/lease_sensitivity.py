@@ -1,9 +1,11 @@
 """§5.4: sensitivity to (RdLease, WrLease) on the coherence-heavy Xtreme
-suite.  Paper: widening |RdLease-WrLease| from 5 to 10 costs up to ~3%."""
-import numpy as np
+suite.  Paper: widening |RdLease-WrLease| from 5 to 10 costs up to ~3%.
 
-from benchmarks.common import cached, emit, timed
-from repro.core import simulate
+Leases are DATA fields of the config pytree (sysconfig), so all six pairs
+share one static structure and run as a single 6-wide config-vmap group —
+the purest form of the batched sweep's config axis (DESIGN.md §5)."""
+from benchmarks import common
+from benchmarks.common import cached, emit
 from repro.core.sysconfig import sm_wt_halcone
 from repro.core.traces import XtremeSpec, xtreme
 
@@ -13,24 +15,27 @@ SYS = dict(n_gpus=4, cus_per_gpu=32)
 
 def run_all(force=False):
     def compute():
-        out = {}
         spec = XtremeSpec(3, 24, 6)
         base = sm_wt_halcone(**SYS)
-        ops, addrs = xtreme(base, spec)
-        for rd, wr in PAIRS:
-            cfg = sm_wt_halcone(rd_lease=rd, wr_lease=wr, **SYS)
-            r, us = timed(simulate, cfg, ops, addrs)
-            out[f"rd{rd}_wr{wr}"] = {"cycles": float(r["cycles"]), "us": us}
-        return out
+        named = {"xtreme3_192KB": xtreme(base, spec)}
+        cfgs = [(f"rd{rd}_wr{wr}",
+                 sm_wt_halcone(rd_lease=rd, wr_lease=wr, **SYS))
+                for rd, wr in PAIRS]
+        out = common.sweep(cfgs, named, measure_sequential=False)
+        res = {name: {"cycles": out["cycles"][ci][0]}
+               for ci, name in enumerate(out["configs"])}
+        res["wall"] = out["wall"]
+        return res
 
-    return cached("lease_sensitivity", compute, force)
+    return cached("lease_sensitivity", compute, force, script=__file__)
 
 
 def main(force=False):
     data = run_all(force)
-    best = min(v["cycles"] for v in data.values())
-    for k, v in data.items():
-        emit(f"lease/{k}", v["us"], f"vs_best={v['cycles']/best - 1:+.2%}")
+    points = {k: v for k, v in data.items() if k != "wall"}
+    best = min(v["cycles"] for v in points.values())
+    for k, v in points.items():
+        emit(f"lease/{k}", 0.0, f"vs_best={v['cycles']/best - 1:+.2%}")
     return data
 
 

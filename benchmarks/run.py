@@ -1,11 +1,36 @@
 """Benchmark harness: one module per paper table/figure.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--force] [--only fig7,...]
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--force] [--only fig7,...]
+  PYTHONPATH=src python -m benchmarks.run --suite figures [--mini]
+
+``--suite figures`` drives the three figure scripts through the batched
+sweep engine (one jit per grid, DESIGN.md §5) and writes one consolidated
+artifact ``benchmarks/artifacts/figures.json`` (``figures_mini.json`` with
+``--mini`` — the CI footprint: 2 configs x 2 benchmarks, small ROUNDS).
+
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 """
 import argparse
+import json
 import sys
 import traceback
+
+from benchmarks.common import ART
+
+
+def run_figures(force: bool, mini: bool) -> None:
+    """The figure trio on the batched sweep engine + consolidated JSON."""
+    from benchmarks import fig7_speedup, fig8_scaling, fig9_xtreme
+
+    consolidated = {"mini": mini}
+    consolidated["fig7"] = fig7_speedup.main(force=force, mini=mini)
+    if not mini:
+        consolidated["fig8"] = fig8_scaling.main(force=force)
+        consolidated["fig9"] = fig9_xtreme.main(force=force)
+    out = ART / ("figures_mini.json" if mini else "figures.json")
+    out.write_text(json.dumps(consolidated, indent=1))
+    print(f"figures artifact: {out}", file=sys.stderr)
 
 
 def main() -> None:
@@ -15,9 +40,20 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig7,fig8,fig9,"
                          "lease,kernels,roofline,fabric)")
+    ap.add_argument("--suite", default="", choices=["", "figures"],
+                    help="figures: fig7+fig8+fig9 via the batched sweep "
+                         "engine, consolidated into one JSON artifact")
+    ap.add_argument("--mini", action="store_true",
+                    help="CI footprint for --suite figures (2 configs x "
+                         "2 benchmarks, small ROUNDS)")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
 
+    print("name,us_per_call,derived")
+    if args.suite == "figures":
+        run_figures(args.force, args.mini)
+        return
+
+    only = set(args.only.split(",")) if args.only else None
     from benchmarks import (fabric_bench, fig2_rdma_gap, fig7_speedup,
                             fig8_scaling, fig9_xtreme, kernel_bench,
                             lease_sensitivity, roofline)
@@ -31,7 +67,6 @@ def main() -> None:
         ("roofline", roofline.main),
         ("fabric", fabric_bench.run),
     ]
-    print("name,us_per_call,derived")
     failed = []
     for name, fn in suites:
         if only and name not in only:

@@ -2,7 +2,8 @@
 multi-GPU memory-hierarchy simulator, system configs, and trace generators."""
 from repro.core import protocol, traces  # noqa: F401
 from repro.core.engine import (COMPUTE, FENCE, NOP, READ, WRITE,  # noqa: F401
-                               SimState, init_state, simulate)
+                               SimState, init_state, simulate, sweep)
 from repro.core.sysconfig import (ALL_CONFIGS, SystemConfig,  # noqa: F401
                                   rdma_wb_hmg, rdma_wb_nc, sm_wb_nc,
-                                  sm_wt_halcone, sm_wt_nc)
+                                  sm_wt_halcone, sm_wt_nc, stack_configs,
+                                  static_key)

@@ -3,9 +3,21 @@
 TPU-native re-formulation of the paper's event-driven MGPUSim model: the
 protocol advances in *rounds* (one instruction per CU per round) inside a
 ``lax.scan``; every L1/L2/TSU probe, fill and timestamp update is executed as
-a dense array operation batched over all 128+ CUs at once.  Timing is a
-mean-value queueing model: fixed component latencies plus per-round occupancy
-delays at L2 banks / HBM stacks / PCIe links.
+a dense array operation batched over all 128+ CUs at once.  The L1 and L2
+probe+install math — the paper's per-request coherence action — is served by
+``kernels.lease_probe`` (compiled Pallas on TPU/GPU, interpret fallback on
+CPU, selected at runtime).  Timing is a mean-value queueing model: fixed
+component latencies plus per-round occupancy delays at L2 banks / HBM stacks
+/ PCIe links.
+
+Two drivers (DESIGN.md §5):
+
+- ``simulate(cfg, ops, addrs)`` — one (config, trace) cell; returns the
+  per-round read log and final state for litmus-level inspection.
+- ``sweep(cfgs, ops, addrs)`` — the batched figure engine: ops/addrs are a
+  padded ``[B, NC, R]`` benchmark batch (``traces.pack_batch``), configs are
+  grouped by ``sysconfig.static_key`` and stacked into vmappable pytrees,
+  and ONE jit produces the whole (config x benchmark) result matrix.
 
 Modeled systems (sysconfig.py): RDMA-WB-NC, RDMA-WB-C-HMG (VI-style home
 directory over PCIe), SM-WB-NC, SM-WT-NC, SM-WT-C-HALCONE.
@@ -21,15 +33,16 @@ jumps to the global maximum), 4=compute (addr field = cycles).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
+import functools
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import protocol
-from repro.core.sysconfig import SystemConfig
+from repro.core.sysconfig import SystemConfig, stack_configs, static_key
+from repro.kernels.lease_probe import lease_probe
 
 NOP, READ, WRITE, FENCE, COMPUTE = 0, 1, 2, 3, 4
 INVALID = jnp.int32(-1)
@@ -121,9 +134,6 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-import functools
-
-
 @functools.lru_cache(maxsize=64)
 def _sim_fn(cfg: SystemConfig, n_addr: int, T: int):
     step = _make_round(cfg, n_addr)
@@ -162,7 +172,73 @@ def simulate(cfg: SystemConfig, ops, addrs):
     }
 
 
-def _make_round(cfg: SystemConfig, n_addr: int):
+# --------------------------------------------------------------- sweep
+@functools.partial(jax.jit, static_argnames=("n_addr",))
+def _sweep_run(groups, ops_bt, addrs_bt, *, n_addr):
+    """groups: tuple of stacked SystemConfig pytrees (data leaves [Ci]);
+    ops_bt/addrs_bt: [B, T, NC].  Returns a tuple of per-group result
+    pytrees with leading [Ci, B] axes — the whole grid in one jit."""
+    T = ops_bt.shape[1]
+
+    def one(cfg, ops_t, addrs_t):
+        step = _make_round(cfg, n_addr, with_log=False)
+        st, _ = jax.lax.scan(step, init_state(cfg, n_addr),
+                             (ops_t, addrs_t,
+                              jnp.arange(T, dtype=jnp.int32)))
+        per_gpu = st.time.reshape(cfg.n_gpus, cfg.cus_per_gpu).mean(axis=1)
+        return {"cycles": jnp.max(per_gpu), "makespan_max": jnp.max(st.time),
+                "counters": st.ctr}
+
+    over_b = jax.vmap(one, in_axes=(None, 0, 0))      # benchmark axis
+    over_cb = jax.vmap(over_b, in_axes=(0, None, None))  # config axis
+    return tuple(over_cb(g, ops_bt, addrs_bt) for g in groups)
+
+
+def sweep(cfgs: Sequence[SystemConfig], ops, addrs):
+    """Batched (config x benchmark) sweep — the figure engine.
+
+    ops/addrs: ``[B, NC, R]`` (``traces.pack_batch``); every config must
+    have ``n_cus == NC``.  Configs are grouped by structural signature
+    (``sysconfig.static_key``); each group is stacked into one pytree and
+    double-vmapped (configs x benchmarks) over a shared scan, all groups
+    inside ONE jit.  Returns ``{"cycles": [C, B], "makespan_max": [C, B],
+    "counters": {k: [C, B]}}`` in the input config order.  Identical math
+    to per-cell ``simulate`` (tests/test_sweep.py asserts parity); the
+    per-round read log is elided to keep the batch memory-light."""
+    cfgs = list(cfgs)
+    ops = np.asarray(ops, np.int32)
+    addrs = np.asarray(addrs, np.int32)
+    if ops.ndim != 3:
+        raise ValueError(f"expected [B, NC, R] batch, got {ops.shape}")
+    B, NC, R = ops.shape
+    for c in cfgs:
+        if c.n_cus != NC:
+            raise ValueError(f"config {c.name} has n_cus={c.n_cus}, "
+                             f"traces have NC={NC}")
+    n_addr = _next_pow2(int(addrs.max()) + 2)
+    T = _next_pow2(R)
+    if T != R:                               # pad with NOPs (no effect)
+        pad = ((0, 0), (0, 0), (0, T - R))
+        ops = np.pad(ops, pad)
+        addrs = np.pad(addrs, pad)
+    ops_bt = jnp.asarray(ops.transpose(0, 2, 1))     # [B, T, NC]
+    addrs_bt = jnp.asarray(addrs.transpose(0, 2, 1))
+    # group configs by static structure, preserving first-appearance order
+    order: dict = {}
+    for i, c in enumerate(cfgs):
+        order.setdefault(static_key(c), []).append(i)
+    groups = tuple(stack_configs([cfgs[i] for i in idx])
+                   for idx in order.values())
+    outs = _sweep_run(groups, ops_bt, addrs_bt, n_addr=n_addr)
+    # scatter group rows back to the input config order
+    flat_idx = [i for idx in order.values() for i in idx]
+    perm = np.argsort(flat_idx)
+    merged = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0), *outs)
+    return jax.tree_util.tree_map(lambda x: x[perm], merged)
+
+
+def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
     NC = cfg.n_cus
     G, NB, CU = cfg.n_gpus, cfg.l2_banks, cfg.cus_per_gpu
     NL2 = G * NB
@@ -189,17 +265,9 @@ def _make_round(cfg: SystemConfig, n_addr: int):
         mem = is_read | is_write
         ctr = dict(st.ctr)
 
-        # ---------------- L1 probe ----------------
+        # ---------------- request routing (addr-only, no probes) ----------
         s1 = addr % cfg.l1_sets
-        hit1_tag, way1 = _probe(st.l1_tag, cu_ids, s1, addr)
-        rts1 = st.l1_rts[cu_ids, s1, way1]
-        lease1 = protocol.valid(st.l1_cts, rts1) if coherent else True
-        l1_hit = hit1_tag & lease1 & mem
-        coh1 = hit1_tag & mem & (~l1_hit)
-
-        need_l2 = (is_read & ~l1_hit) | is_write        # WT L1, writes descend
         remote = (home_gpu(addr) != gpu_of) & rdma
-
         # L2 instance: SM -> own GPU; RDMA-NC -> home GPU's L2;
         # HMG -> local first, then home.
         bank = addr % NB
@@ -209,31 +277,13 @@ def _make_round(cfg: SystemConfig, n_addr: int):
             l2c = jnp.where(remote, home_l2, own_l2)
         else:
             l2c = own_l2
-
         s2 = (addr // NB) % cfg.l2_sets
-        hit2_tag, way2 = _probe(st.l2_tag, l2c, s2, addr)
-        rts2 = st.l2_rts[l2c, s2, way2]
-        lease2 = protocol.valid(st.l2_cts[l2c], rts2) if coherent else True
-        l2_hit = hit2_tag & lease2 & need_l2
-        coh2 = hit2_tag & need_l2 & (~l2_hit)
-
-        # HMG second-level probe at the home node for local misses
-        if hmg:
-            hitH_tag, wayH = _probe(st.l2_tag, home_l2, s2, addr)
-            home_hit = hitH_tag & need_l2 & ~l2_hit & remote
-        else:
-            home_hit = jnp.zeros_like(l2_hit)
-            wayH = way2
-
-        # who reaches MM:  WT: all writes; WB: write misses (allocate) + read
-        # misses.  HALCONE: writes always; read misses.
-        if wb:
-            need_mm = need_l2 & ~l2_hit & ~home_hit
-        else:
-            need_mm = (is_write | (need_l2 & ~l2_hit & ~home_hit))
-
-        # ---------------- TSU / MM ----------------
         hb = hbm_of(addr)
+
+        # ---------------- TSU lease math (values; gating applied later) ---
+        # The grant (mwts, mrts) a request WOULD get from the TSU.  Whether
+        # it reaches the TSU (need_mm) is only known after the L1/L2 probes;
+        # state updates are gated below.
         if coherent:
             ts_set = addr % cfg.tsu_sets
             hitT, wayT = _probe(st.tsu_tag, hb, ts_set, addr)
@@ -251,6 +301,76 @@ def _make_round(cfg: SystemConfig, n_addr: int):
             mrts = jnp.where(ovf, jnp.where(is_write, cfg.wr_lease,
                                             cfg.rd_lease), mrts)
             new_memts = jnp.where(ovf, mrts, new_memts)
+        else:
+            # trivial grant: [0, inf) — install math then yields the
+            # always-valid lease non-coherent blocks carry
+            mwts = jnp.zeros((NC,), jnp.int32)
+            mrts = jnp.full((NC,), 2**30, jnp.int32)
+
+        # ---------------- L2 probe + install math (Pallas hot path) -------
+        # hit2u is UNGATED by need_l2 (not known yet).  Rows that turn out
+        # not to reach L2 discard every derived value below: L2/L1 installs
+        # are masked by l2_install/l1_install, both of which imply need_l2.
+        (hit2_tag, hit2u, way2, rts2, l2_bwts, l2_brts, l2_ncts) = \
+            lease_probe(st.l2_tag[l2c, s2][:, :-1],
+                        st.l2_rts[l2c, s2][:, :-1],
+                        st.l2_cts[l2c], addr, mwts, mrts)
+
+        # HMG second-level probe at the home node for local misses
+        if hmg:
+            (hitH_tag, _, wayH, _, _, _, _) = \
+                lease_probe(st.l2_tag[home_l2, s2][:, :-1],
+                            st.l2_rts[home_l2, s2][:, :-1],
+                            st.l2_cts[home_l2], addr, mwts, mrts)
+            home_hit_u = hitH_tag & ~hit2u & remote
+        else:
+            wayH = way2
+            home_hit_u = jnp.zeros_like(hit2u)
+
+        # ---------------- response lease travelling up to L1 --------------
+        # who reaches MM:  WT: all writes; WB: write misses (allocate) + read
+        # misses.  HALCONE: writes always; read misses.  (ungated variant)
+        if wb:
+            need_mm_u = ~hit2u & ~home_hit_u
+        else:
+            need_mm_u = is_write | (~hit2u & ~home_hit_u)
+        wts_from_l2 = jnp.where(hit2u | home_hit_u,
+                                jnp.where(hit2u, st.l2_wts[l2c, s2, way2],
+                                          st.l2_wts[home_l2, s2, wayH]),
+                                mwts)
+        rts_from_l2 = jnp.where(hit2u | home_hit_u,
+                                jnp.where(hit2u, rts2,
+                                          st.l2_rts[home_l2, s2, wayH]),
+                                mrts)
+        # lease hits keep their timestamps; misses and writes take the fresh
+        # install (writes refresh the lease even on a hit)
+        l2_new_wts = jnp.where(hit2u & ~is_write,
+                               st.l2_wts[l2c, s2, way2], l2_bwts)
+        l2_new_rts = jnp.where(hit2u & ~is_write, rts2, l2_brts)
+        resp_wts = jnp.where(need_mm_u | is_write, l2_new_wts, wts_from_l2)
+        resp_rts = jnp.where(need_mm_u | is_write, l2_new_rts, rts_from_l2)
+
+        # ---------------- L1 probe + install math (Pallas hot path) -------
+        (hit1_tag, hit1u, way1, _, l1_new_wts, l1_new_rts, l1_ncts) = \
+            lease_probe(st.l1_tag[cu_ids, s1][:, :-1],
+                        st.l1_rts[cu_ids, s1][:, :-1],
+                        st.l1_cts, addr, resp_wts, resp_rts)
+        l1_lease = protocol.Lease(l1_new_wts, l1_new_rts)
+        l1_hit = hit1u & mem
+        coh1 = hit1_tag & mem & (~l1_hit)
+        need_l2 = (is_read & ~l1_hit) | is_write        # WT L1, writes descend
+
+        # ---------------- gate the L2/MM outcomes -------------------------
+        l2_hit = hit2u & need_l2
+        coh2 = hit2_tag & need_l2 & (~l2_hit)
+        home_hit = home_hit_u & need_l2
+        if wb:
+            need_mm = need_l2 & ~l2_hit & ~home_hit
+        else:
+            need_mm = is_write | (need_l2 & ~l2_hit & ~home_hit)
+
+        # ---------------- TSU state updates -------------------------------
+        if coherent:
             tsu_active = need_mm
             tw = jnp.where(tsu_active, wayT, cfg.tsu_ways)
             new_tag = st.tsu_tag.at[hb, ts_set, tw].max(
@@ -265,8 +385,6 @@ def _make_round(cfg: SystemConfig, n_addr: int):
                 jnp.where(tsu_active, new_memts, 0))
             tsu_tag = new_tag
         else:
-            mwts = jnp.zeros((NC,), jnp.int32)
-            mrts = jnp.full((NC,), 2**30, jnp.int32)
             tsu_tag, tsu_memts = st.tsu_tag, st.tsu_memts
 
         # MM data versions: writes increment (scatter-add); then everyone
@@ -287,35 +405,6 @@ def _make_round(cfg: SystemConfig, n_addr: int):
 
         # value that lands in caches on a write: the post-write version
         fill_val = jnp.where(is_write, mm_val, read_val)
-
-        # ---------------- timestamp updates ----------------
-        # L2 fill from MM (or lease from TSU)
-        wts_from_l2 = jnp.where(l2_hit | home_hit,
-                                jnp.where(l2_hit, st.l2_wts[l2c, s2, way2],
-                                          st.l2_wts[home_l2, s2, wayH]),
-                                mwts)
-        rts_from_l2 = jnp.where(l2_hit | home_hit,
-                                jnp.where(l2_hit, rts2,
-                                          st.l2_rts[home_l2, s2, wayH]),
-                                mrts)
-        if coherent:
-            l2_lease = protocol.install(st.l2_cts[l2c], mwts, mrts)
-            l2_new_wts = jnp.where(l2_hit, st.l2_wts[l2c, s2, way2],
-                                   l2_lease.wts)
-            l2_new_rts = jnp.where(l2_hit, rts2, l2_lease.rts)
-            # writes refresh the lease even on a hit
-            wl = protocol.install(st.l2_cts[l2c], mwts, mrts)
-            l2_new_wts = jnp.where(is_write, wl.wts, l2_new_wts)
-            l2_new_rts = jnp.where(is_write, wl.rts, l2_new_rts)
-            resp_wts = jnp.where(need_mm | is_write, l2_new_wts, wts_from_l2)
-            resp_rts = jnp.where(need_mm | is_write, l2_new_rts, rts_from_l2)
-            l1_lease = protocol.install(st.l1_cts, resp_wts, resp_rts)
-        else:
-            zero = jnp.zeros((NC,), jnp.int32)
-            big = jnp.full((NC,), 2**30, jnp.int32)
-            l2_new_wts, l2_new_rts = zero, big
-            resp_wts, resp_rts = zero, big
-            l1_lease = protocol.Lease(zero, big)
 
         # ---------------- install into L2 ----------------
         l2_install = need_l2 & (~l2_hit | is_write)
@@ -339,28 +428,29 @@ def _make_round(cfg: SystemConfig, n_addr: int):
                 l2c, s2, jnp.where(l2_hit & is_write, way2,
                                    cfg.l2_ways)].set(True)
         if coherent:
-            # max with 0 is a no-op for non-writers
-            l2_cts = st.l2_cts.at[l2c].max(
-                jnp.where(is_write, protocol.cts_after_write(
-                    st.l2_cts[l2c], l2_new_wts), 0))
+            # max with 0 is a no-op for non-writers; the kernel's new_cts IS
+            # cts_after_write(l2_cts, l2_bwts) for the write's fresh lease
+            l2_cts = st.l2_cts.at[l2c].max(jnp.where(is_write, l2_ncts, 0))
         else:
             l2_cts = st.l2_cts
 
         # HMG: writer invalidates every sharer copy (VI), pays PCIe msgs
         inval_msgs = jnp.zeros((), jnp.float32)
         if hmg:
-            w_addrs = jnp.where(is_write, addr, -7)
             shr = st.dir_sharers[addr]                       # [NC, G]
             n_shr = (shr.sum(-1) - shr[cu_ids, gpu_of]) * is_write
             inval_msgs = jnp.sum(n_shr.astype(jnp.float32))
-            tag_mask = (l2_tag[..., None] == w_addrs) \
-                       & is_write[None, None, None, :]
-            kill = tag_mask.any(-1)
+            # membership test instead of an all-pairs compare: mark written
+            # addresses in a dense table, gather it at every live tag.
+            # (real addrs are < n_addr-1, so the trash row stays False)
+            written = jnp.zeros((n_addr,), bool).at[
+                jnp.where(is_write, addr, n_addr - 1)].max(is_write)
+            safe_tag = jnp.where(l2_tag >= 0, l2_tag, n_addr - 1)
+            kill = written[safe_tag]                         # [NL2, S2, W+1]
             # keep the writer's own copy
             own_keep = jnp.zeros_like(kill)
             own_keep = own_keep.at[l2c, s2, w2s].set(is_write)
-            kill = kill & ~own_keep
-            l2_tag = jnp.where(kill, INVALID, l2_tag)
+            l2_tag = jnp.where(kill & ~own_keep, INVALID, l2_tag)
             new_shr = jnp.zeros_like(shr)
             new_shr = new_shr.at[cu_ids, gpu_of].set(is_write | is_read)
             dir_sharers = st.dir_sharers.at[
@@ -384,10 +474,8 @@ def _make_round(cfg: SystemConfig, n_addr: int):
         l1_lru = st.l1_lru.at[cu_ids, s1,
                               jnp.where(mem, w1i, cfg.l1_ways)].set(rnd)
         if coherent:
-            l1_cts = jnp.where(is_write,
-                               protocol.cts_after_write(st.l1_cts,
-                                                        l1_lease.wts),
-                               st.l1_cts)
+            # the kernel's new_cts IS cts_after_write(l1_cts, l1_lease.wts)
+            l1_cts = jnp.where(is_write, l1_ncts, st.l1_cts)
         else:
             l1_cts = st.l1_cts
 
@@ -449,6 +537,6 @@ def _make_round(cfg: SystemConfig, n_addr: int):
             l2_lru=l2_lru_new, l2_dirty=l2_dirty, l2_cts=l2_cts,
             tsu_tag=tsu_tag, tsu_memts=tsu_memts, mm_ver=mm_ver,
             dir_sharers=dir_sharers, time=time, ctr=ctr)
-        return new_st, read_log
+        return new_st, (read_log if with_log else None)
 
     return round_step

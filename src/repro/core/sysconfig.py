@@ -1,13 +1,45 @@
-"""System configurations for the paper's five evaluated MGPU systems (§4.1).
+"""System configurations for the paper's five evaluated MGPU systems (§4.1),
+as a jax pytree so the config axis is vmappable (DESIGN.md §5).
 
-Geometry is Table 2's real sizes (64 B blocks): L1 16KB 4-way, L2 256KB
-16-way x 8 banks/GPU, 8 HBM stacks, TSU 8-way.  Latency/bandwidth constants
-follow §4.1: PCIe4 32 GB/s/dir links, 1 TB/s aggregate L2<->MM, 100-cycle MC,
-50-cycle TSU (accessed in parallel with DRAM), 1 GHz clock.
+Modeled systems (Table 1 / §4.1's evaluated set; the name encodes
+interconnect - L2 policy - coherence):
+
+  ===================  =========  =========  =============================
+  name                 topology   L2 policy  coherence
+  ===================  =========  =========  =============================
+  RDMA-WB-NC           rdma       wb         none (baseline; explicit h2d
+                                             copies, remote L2 over PCIe)
+  RDMA-WB-C-HMG        rdma       wb         HMG: VI-style home directory,
+                                             writer invalidates sharers
+  SM-WB-NC             sm         wb         none (shared memory, no coh.)
+  SM-WT-NC             sm         wt         none (the paper's perf target)
+  SM-WT-C-HALCONE      sm         wt         HALCONE timestamps (§3)
+  ===================  =========  =========  =============================
+
+Geometry is Table 2's real sizes (64 B blocks): per-CU L1 16 KB 4-way
+(l1_sets=64), per-GPU L2 256 KB 16-way x 8 banks (l2_sets=256), 8 HBM
+stacks, TSU 8-way with 2048 sets per stack.  Latency/bandwidth constants
+follow §4.1: PCIe4 32 GB/s/dir links, 1 TB/s aggregate L2<->MM, 100-cycle
+MC folded into mm_lat, 50-cycle TSU (accessed in parallel with DRAM -> off
+the critical path), 1 GHz clock.  The paper's default leases are
+RdLease=10, WrLease=5 (§4.2).
+
+Pytree split (registered below): **meta fields** are structural — they fix
+array shapes and traced branch structure (geometry, GPU/CU counts,
+topology/policy/protocol strings) and stay Python scalars; **data fields**
+are the numeric knobs (leases, latencies, service times, mlp) and become
+traced leaves.  Configs that share ``static_key()`` can therefore be
+stacked with ``stack_configs`` and swept in one ``jax.vmap`` — a new system
+variant along those axes is one config row, not new code (MGPU-TSM's
+shared-memory-config argument).  ``core.engine.sweep`` groups mixed-static
+configs automatically.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +82,46 @@ class SystemConfig:
     @property
     def coherent(self) -> bool:
         return self.protocol == "halcone"
+
+
+# Pytree split: meta = structural (shapes / branch structure; must agree for
+# two configs to share one vmapped sweep group), data = numeric knobs
+# (vmappable axis).  rd/wr leases are data: a lease sweep is one stacked
+# config (benchmarks/lease_sensitivity.py drives 6 lease pairs as one
+# vmap group of 6).
+META_FIELDS = ("name", "n_gpus", "cus_per_gpu", "topology", "l2_policy",
+               "protocol", "l1_sets", "l1_ways", "l2_banks", "l2_sets",
+               "l2_ways", "n_hbm", "tsu_sets", "tsu_ways", "page_blocks")
+DATA_FIELDS = ("rd_lease", "wr_lease", "l1_lat", "l2_lat", "mm_lat",
+               "tsu_lat", "pcie_lat", "l2_service", "mm_service",
+               "pcie_service", "mlp")
+
+jax.tree_util.register_dataclass(SystemConfig, data_fields=list(DATA_FIELDS),
+                                 meta_fields=list(META_FIELDS))
+
+
+def static_key(cfg: SystemConfig) -> tuple:
+    """Hashable structural signature.  Configs with equal keys (ignoring
+    ``name``) lower to the same traced round function and may be stacked
+    into one vmap group."""
+    return tuple(getattr(cfg, f) for f in META_FIELDS if f != "name")
+
+
+def stack_configs(cfgs) -> SystemConfig:
+    """Stack configs sharing static structure into one config whose data
+    leaves carry a leading [C] axis (the vmappable config axis)."""
+    cfgs = list(cfgs)
+    base = static_key(cfgs[0])
+    for c in cfgs[1:]:
+        if static_key(c) != base:
+            raise ValueError(f"config {c.name} has different static "
+                             f"structure than {cfgs[0].name}; use "
+                             "engine.sweep to mix static groups")
+    # name is a meta field: normalize it so the treedefs match under tree_map
+    joined = "|".join(c.name for c in cfgs)
+    cfgs = [dataclasses.replace(c, name=joined) for c in cfgs]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *cfgs)
 
 
 def rdma_wb_nc(**kw) -> SystemConfig:

@@ -2,9 +2,37 @@
 suite (§4.3.2, reproduced exactly at block granularity), and generative models
 of the 11 standard benchmarks (Table 3).
 
+The 11 standard benchmarks (STANDARD) map back to the paper's Table 3 suite
+(Hetero-Mark, PolyBench, SHOC and AMDAPPSDK workloads) by footprint and
+memory-intensity class:
+
+  =====  ==========================  =========  ========  ==================
+  key    workload                    footprint  class     mix notes
+  =====  ==========================  =========  ========  ==================
+  aes    AES-256 encryption           71 MB     compute   table-lookup reuse
+  atax   matrix-vector (A^T A x)      64 MB     memory    streaming, shared A
+  bfs    breadth-first search        574 MB     memory    irregular, shared
+                                                          frontier (70%)
+  bicg   BiCGStab sub-kernels         64 MB     compute   two streamed MVs
+  bs     black-scholes                67 MB     memory    50% writes, in-place
+  fir    FIR filter                   67 MB     memory    sliding-window reuse
+  fws    Floyd-Warshall               32 MB     memory    in-place shared
+                                                          matrix (80% shared)
+  mm     matrix multiply             192 MB     memory    tiled reuse (55%)
+  mp     MaxPool                      64 MB     compute   dense conv-style
+  rl     ReLU                         67 MB     memory    pure streaming
+  conv   convolution                 145 MB     memory    stencil reuse (50%)
+  =====  ==========================  =========  ========  ==================
+
 Block granularity: one READ/WRITE per 64 B block touched; the 16 fp32 elements
 a block holds are folded into a COMPUTE op (ALU + L1-hit cycles), which keeps
 round counts tractable without changing miss behaviour.
+
+For the batched figure engine (DESIGN.md §5) a set of per-benchmark traces is
+padded to one dense ``[B, NC, R]`` tensor by ``pack_batch``: every trace is
+right-padded with NOPs to the longest round count (NOP rounds advance no
+state, no time and no counters, so padding is exact, not approximate), and
+the batch axis becomes the vmapped benchmark axis of ``engine.sweep``.
 """
 from __future__ import annotations
 
@@ -26,6 +54,26 @@ def _pack(streams: List[List[Tuple[int, int]]]) -> Tuple[np.ndarray, np.ndarray]
         for t, (o, a) in enumerate(s):
             ops[i, t] = o
             addrs[i, t] = a
+    return ops, addrs
+
+
+def pack_batch(trace_list) -> Tuple[np.ndarray, np.ndarray]:
+    """[(ops [NC, T_i], addrs [NC, T_i]), ...] -> ([B, NC, R], [B, NC, R]).
+
+    Pads every trace with NOPs to the longest round count R so a benchmark
+    batch is one dense tensor — the vmapped benchmark axis of
+    ``engine.sweep``.  All traces must share NC (one CU grid per sweep)."""
+    trace_list = list(trace_list)
+    NC = trace_list[0][0].shape[0]
+    R = max(o.shape[1] for o, _ in trace_list)
+    B = len(trace_list)
+    ops = np.zeros((B, NC, R), np.int32)
+    addrs = np.zeros((B, NC, R), np.int32)
+    for b, (o, a) in enumerate(trace_list):
+        if o.shape[0] != NC:
+            raise ValueError(f"trace {b} has NC={o.shape[0]}, expected {NC}")
+        ops[b, :, :o.shape[1]] = o
+        addrs[b, :, :a.shape[1]] = a
     return ops, addrs
 
 

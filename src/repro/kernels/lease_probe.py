@@ -1,7 +1,16 @@
 """HALCONE lease-probe kernel: the protocol engine's hot inner loop
 (tag compare + lease check + Algorithm 1/2 install math), batched over all
 concurrent requests.  This is the paper's per-request coherence action as a
-single fused VMEM pass — the Pallas face of repro.core.protocol."""
+single fused VMEM pass — the Pallas face of repro.core.protocol, and since
+the batched sweep engine (DESIGN.md §5) the op that serves every L1 and L2
+probe+install inside ``core.engine``'s round step.
+
+Backend selection is a runtime decision: with ``interpret=None`` (the
+default, used by the engine) the kernel compiles natively on TPU/GPU and
+falls back to interpret mode on CPU, where Pallas has no native lowering.
+Interpret mode traces the identical kernel body into plain XLA ops, so the
+engine's math is bit-identical across backends.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,7 +21,8 @@ from jax.experimental import pallas as pl
 
 
 def _probe_kernel(tag_ref, rts_ref, cts_ref, addr_ref, mwts_ref, mrts_ref,
-                  hit_ref, way_ref, nwts_ref, nrts_ref, ncts_ref):
+                  taghit_ref, hit_ref, way_ref, rowrts_ref, nwts_ref,
+                  nrts_ref, ncts_ref):
     tags = tag_ref[...]                                 # [bn, W]
     rts = rts_ref[...]
     cts = cts_ref[...]
@@ -20,13 +30,19 @@ def _probe_kernel(tag_ref, rts_ref, cts_ref, addr_ref, mwts_ref, mrts_ref,
     eq = tags == addr[:, None]
     tag_hit = eq.any(axis=-1)
     way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
-    row_rts = jnp.sum(jnp.where(eq, rts, 0), axis=-1)   # unique hit way
-    hit = tag_hit & (cts <= row_rts)
+    # first-match way only: the engine can hold a stale duplicate of a tag
+    # (coherence-miss installs go to a victim way while the expired copy
+    # stays live), and the probe must read the same way argmax selects
+    first = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=-1) == 1)
+    row_rts = jnp.sum(jnp.where(first, rts, 0), axis=-1)
+    hit = tag_hit & (cts <= row_rts)                    # protocol.valid
     # protocol.install: Bwts = max(cts, Mwts); Brts = max(Bwts+1, Mrts)
     bwts = jnp.maximum(cts, mwts_ref[...])
     brts = jnp.maximum(bwts + 1, mrts_ref[...])
+    taghit_ref[...] = tag_hit.astype(jnp.int32)
     hit_ref[...] = hit.astype(jnp.int32)
     way_ref[...] = way
+    rowrts_ref[...] = row_rts
     nwts_ref[...] = bwts
     nrts_ref[...] = brts
     ncts_ref[...] = jnp.maximum(cts, bwts)              # cts_after_write
@@ -34,10 +50,27 @@ def _probe_kernel(tag_ref, rts_ref, cts_ref, addr_ref, mwts_ref, mrts_ref,
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts, *, bn=256,
-                interpret=True):
-    """tag_rows/rts_rows: [N, W]; cts/addr/mwts/mrts: [N] (int32).
+                interpret=None):
+    """Fused probe + install over gathered set rows.
 
-    Returns (hit, way, new_wts, new_rts, new_cts), each [N] int32."""
+    tag_rows/rts_rows: [N, W] live ways of each request's set; cts/addr/
+    mwts/mrts: [N] (int32).  (mwts, mrts) is the response lease arriving
+    from the level below (TSU grant for an L2 probe, L2 response for an L1
+    probe).
+
+    Returns (tag_hit, hit, way, row_rts, new_wts, new_rts, new_cts):
+      tag_hit  — tag match on a live way (coherency misses = tag_hit & ~hit)
+      hit      — tag match AND lease valid (cts <= rts;  protocol.valid)
+      way      — the matching way (meaningful only under tag_hit)
+      row_rts  — rts of the matching way (0 when no tag match)
+      new_wts/new_rts — protocol.install(cts, mwts, mrts)
+      new_cts  — protocol.cts_after_write(cts, new_wts)
+
+    ``interpret=None`` selects the backend at runtime: compiled Pallas on
+    TPU/GPU, interpret fallback on CPU."""
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu", "cuda",
+                                                  "rocm")
     N, W = tag_rows.shape
     bn = min(bn, N)
     while N % bn:
@@ -51,9 +84,10 @@ def lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts, *, bn=256,
         in_specs=[pl.BlockSpec((bn, W), row), pl.BlockSpec((bn, W), row),
                   pl.BlockSpec((bn,), vec), pl.BlockSpec((bn,), vec),
                   pl.BlockSpec((bn,), vec), pl.BlockSpec((bn,), vec)],
-        out_specs=[pl.BlockSpec((bn,), vec)] * 5,
-        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32)] * 5,
+        out_specs=[pl.BlockSpec((bn,), vec)] * 7,
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32)] * 7,
         interpret=interpret,
     )(tag_rows, rts_rows, cts, addr, mwts, mrts)
-    hit, way, nwts, nrts, ncts = outs
-    return hit.astype(bool), way, nwts, nrts, ncts
+    tag_hit, hit, way, row_rts, nwts, nrts, ncts = outs
+    return (tag_hit.astype(bool), hit.astype(bool), way, row_rts, nwts,
+            nrts, ncts)

@@ -56,12 +56,15 @@ def lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts):
     """HALCONE probe+install math (engine hot loop) over gathered set rows.
 
     tag_rows/rts_rows: [N,W]; cts/addr/mwts/mrts: [N].
-    Returns (hit, way, new_wts, new_rts, new_cts)."""
+    Returns (tag_hit, hit, way, row_rts, new_wts, new_rts, new_cts) —
+    the same seven outputs as kernels.lease_probe, derived exclusively
+    from core.protocol so the kernel's math is pinned to Algorithms 1-5."""
     eq = tag_rows == addr[:, None]
     tag_hit = eq.any(-1)
-    way = jnp.argmax(eq, -1)
+    way = jnp.argmax(eq, -1).astype(jnp.int32)
     rts = jnp.take_along_axis(rts_rows, way[:, None], 1)[:, 0]
-    hit = tag_hit & protocol.valid(cts, rts)
+    row_rts = jnp.where(tag_hit, rts, 0)
+    hit = tag_hit & protocol.valid(cts, row_rts)
     lease = protocol.install(cts, mwts, mrts)
     new_cts = protocol.cts_after_write(cts, lease.wts)
-    return hit, way, lease.wts, lease.rts, new_cts
+    return tag_hit, hit, way, row_rts, lease.wts, lease.rts, new_cts

@@ -128,9 +128,8 @@ def test_ssd_kernel_matches_full_ssm_path():
     np.testing.assert_allclose(state, final_ref, rtol=1e-3, atol=1e-3)
 
 
-@pytest.mark.parametrize("N,W", [(64, 4), (256, 16), (100, 8)])
-def test_lease_probe(N, W):
-    rng = np.random.default_rng(0)
+def _lease_probe_inputs(N, W, seed=0):
+    rng = np.random.default_rng(seed)
     tag_rows = rng.integers(-1, 50, (N, W)).astype(np.int32)
     rts_rows = rng.integers(0, 40, (N, W)).astype(np.int32)
     cts = rng.integers(0, 40, (N,)).astype(np.int32)
@@ -144,15 +143,86 @@ def test_lease_probe(N, W):
             if tag_rows[i, j] in seen:
                 tag_rows[i, j] = -2 - j
             seen.add(tag_rows[i, j])
+    return tag_rows, rts_rows, cts, addr, mwts, mrts
+
+
+_PROBE_OUTS = ["tag_hit", "hit", "way", "row_rts", "nwts", "nrts", "ncts"]
+
+
+@pytest.mark.parametrize("N,W", [(64, 4), (256, 16), (100, 8)])
+def test_lease_probe(N, W):
+    tag_rows, rts_rows, cts, addr, mwts, mrts = _lease_probe_inputs(N, W)
     got = lease_probe(jnp.asarray(tag_rows), jnp.asarray(rts_rows),
                       jnp.asarray(cts), jnp.asarray(addr),
                       jnp.asarray(mwts), jnp.asarray(mrts), interpret=True)
     want = ref.lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts)
-    for g, w, name in zip(got, want, ["hit", "way", "nwts", "nrts", "ncts"]):
-        hit_mask = np.asarray(want[0])
+    for g, w, name in zip(got, want, _PROBE_OUTS):
         g, w = np.asarray(g), np.asarray(w)
         if name == "way":           # way only meaningful on tag hits
             eq = (tag_rows == addr[:, None]).any(-1)
             np.testing.assert_array_equal(g[eq], w[eq], err_msg=name)
         else:
             np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+def test_lease_probe_duplicate_tags_use_first_way():
+    """The engine can hold a stale duplicate of a tag (coherence-miss
+    installs go to a victim way while the expired copy stays live): the
+    probe must read the FIRST matching way, exactly like argmax/ref —
+    not mix the ways' timestamps."""
+    tag_rows = np.array([[7, 7, -1, -1],
+                         [7, -1, 7, -1],
+                         [3, 7, 7, 7]], np.int32)
+    rts_rows = np.array([[5, 20, 0, 0],
+                         [20, 0, 5, 0],
+                         [9, 2, 30, 40]], np.int32)
+    cts = np.array([10, 10, 10], np.int32)
+    addr = np.array([7, 7, 7], np.int32)
+    mwts = np.zeros(3, np.int32)
+    mrts = np.full(3, 12, np.int32)
+    got = lease_probe(*map(jnp.asarray, (tag_rows, rts_rows, cts, addr,
+                                         mwts, mrts)), interpret=True)
+    want = ref.lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts)
+    for g, w, name in zip(got, want, _PROBE_OUTS):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+    # row 0: first way rts=5 < cts -> lease-expired despite the rts=20 dup
+    np.testing.assert_array_equal(np.asarray(got[1]), [False, True, False])
+
+
+@pytest.mark.parametrize("interpret", [
+    True,
+    pytest.param(False, marks=pytest.mark.skipif(
+        jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm"),
+        reason="compiled Pallas needs a TPU/GPU backend")),
+])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lease_probe_matches_protocol(interpret, seed):
+    """Bit-for-bit parity of the kernel's install math against
+    core.protocol (Algorithms 1-5) on randomized tag/rts/cts batches —
+    the engine's hot path is pinned to the protocol's decision surface."""
+    from repro.core import protocol
+    tag_rows, rts_rows, cts, addr, mwts, mrts = \
+        _lease_probe_inputs(192, 8, seed)
+    got = lease_probe(jnp.asarray(tag_rows), jnp.asarray(rts_rows),
+                      jnp.asarray(cts), jnp.asarray(addr),
+                      jnp.asarray(mwts), jnp.asarray(mrts),
+                      interpret=interpret)
+    tag_hit, hit, way, row_rts, nwts, nrts, ncts = map(np.asarray, got)
+    lease = protocol.install(jnp.asarray(cts), jnp.asarray(mwts),
+                             jnp.asarray(mrts))
+    np.testing.assert_array_equal(nwts, np.asarray(lease.wts))
+    np.testing.assert_array_equal(nrts, np.asarray(lease.rts))
+    np.testing.assert_array_equal(
+        ncts, np.asarray(protocol.cts_after_write(jnp.asarray(cts),
+                                                  lease.wts)))
+    # validity: hit == tag match AND protocol.valid(cts, rts of the way)
+    eq = tag_rows == addr[:, None]
+    want_tag_hit = eq.any(-1)
+    rts_way = np.where(want_tag_hit,
+                       np.take_along_axis(rts_rows, eq.argmax(-1)[:, None],
+                                          1)[:, 0], 0)
+    np.testing.assert_array_equal(tag_hit, want_tag_hit)
+    np.testing.assert_array_equal(
+        hit, want_tag_hit & np.asarray(protocol.valid(cts, rts_way)))
+    np.testing.assert_array_equal(row_rts, rts_way)

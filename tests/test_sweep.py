@@ -1,0 +1,101 @@
+"""Batched sweep engine vs sequential per-cell simulation (DESIGN.md §5).
+
+The acceptance property of the figure engine: the [C, B] matrix produced by
+ONE jitted ``engine.sweep`` equals running ``engine.simulate`` cell by cell
+— across all five system structures (topology/policy/protocol branches),
+across NOP trace padding, and across the stacked config-vmap axis."""
+import numpy as np
+import pytest
+
+from repro.core import simulate, sweep, traces
+from repro.core.sysconfig import (rdma_wb_hmg, rdma_wb_nc, sm_wb_nc,
+                                  sm_wt_halcone, sm_wt_nc, stack_configs,
+                                  static_key)
+
+KW = dict(n_gpus=2, cus_per_gpu=4)
+ROUNDS = 96
+BENCHES = ("aes", "mm")
+
+
+@pytest.fixture(scope="module")
+def batch():
+    base = sm_wt_halcone(**KW)
+    tl = [traces.standard_trace(base, traces.STANDARD[b], ROUNDS)
+          for b in BENCHES]
+    # unequal lengths exercise pack_batch's NOP padding
+    short = (tl[0][0][:, :ROUNDS - 17], tl[0][1][:, :ROUNDS - 17])
+    tl = [short] + tl[1:]
+    return tl, traces.pack_batch(tl)
+
+
+def _assert_cell_parity(cfg, trace, cycles, counters, bi):
+    r = simulate(cfg, *trace)
+    np.testing.assert_allclose(cycles[bi], float(r["cycles"]),
+                               rtol=1e-6, err_msg=cfg.name)
+    for k, v in r["counters"].items():
+        np.testing.assert_allclose(counters[k][bi], float(v), atol=1e-3,
+                                   err_msg=f"{cfg.name}/{k}")
+
+
+def test_sweep_matches_sequential_all_structures(batch):
+    """All five modeled systems (five distinct static groups) in one jit."""
+    tl, (ops_b, addrs_b) = batch
+    cfgs = [f(**KW) for f in (rdma_wb_nc, rdma_wb_hmg, sm_wb_nc, sm_wt_nc,
+                              sm_wt_halcone)]
+    res = sweep(cfgs, ops_b, addrs_b)
+    assert res["cycles"].shape == (len(cfgs), len(tl))
+    for ci, cfg in enumerate(cfgs):
+        for bi, trace in enumerate(tl):
+            _assert_cell_parity(cfg, trace, res["cycles"][ci],
+                                res["counters"]
+                                and {k: v[ci] for k, v in
+                                     res["counters"].items()}, bi)
+
+
+def test_sweep_config_vmap_group(batch):
+    """Lease variants share static structure -> one stacked vmap group."""
+    tl, (ops_b, addrs_b) = batch
+    cfgs = [sm_wt_halcone(rd_lease=rd, wr_lease=wr, **KW)
+            for rd, wr in [(2, 10), (10, 2), (20, 5)]]
+    assert len({static_key(c) for c in cfgs}) == 1
+    stacked = stack_configs(cfgs)
+    assert stacked.rd_lease.shape == (3,)
+    res = sweep(cfgs, ops_b, addrs_b)
+    for ci, cfg in enumerate(cfgs):
+        for bi, trace in enumerate(tl):
+            r = simulate(cfg, *trace)
+            np.testing.assert_allclose(res["cycles"][ci, bi],
+                                       float(r["cycles"]), rtol=1e-6)
+
+
+def test_sweep_preserves_input_config_order(batch):
+    """Grouping by static structure must not permute the result rows."""
+    tl, (ops_b, addrs_b) = batch
+    # interleave two structures so grouped execution differs from input order
+    cfgs = [sm_wt_halcone(rd_lease=2, **KW), sm_wt_nc(**KW),
+            sm_wt_halcone(rd_lease=30, **KW)]
+    res = sweep(cfgs, ops_b, addrs_b)
+    for ci, cfg in enumerate(cfgs):
+        r = simulate(cfg, *tl[0])
+        np.testing.assert_allclose(res["cycles"][ci, 0], float(r["cycles"]),
+                                   rtol=1e-6, err_msg=f"row {ci}")
+
+
+def test_pack_batch_padding_is_exact():
+    """NOP padding adds no cycles, no counters."""
+    base = sm_wt_halcone(**KW)
+    ops, addrs = traces.standard_trace(base, traces.STANDARD["fir"], 48)
+    padded_ops = np.pad(ops, ((0, 0), (0, 31)))
+    padded_addrs = np.pad(addrs, ((0, 0), (0, 31)))
+    a = simulate(base, ops, addrs)
+    b = simulate(base, padded_ops, padded_addrs)
+    np.testing.assert_allclose(float(a["cycles"]), float(b["cycles"]),
+                               rtol=1e-7)
+    for k in a["counters"]:
+        np.testing.assert_allclose(float(a["counters"][k]),
+                                   float(b["counters"][k]), atol=1e-3)
+
+
+def test_stack_configs_rejects_mixed_structure():
+    with pytest.raises(ValueError):
+        stack_configs([sm_wt_halcone(**KW), sm_wt_nc(**KW)])
