@@ -43,9 +43,10 @@ def _fingerprint(fn: Callable, script: Optional[str] = None) -> str:
         paths.append(pathlib.Path(src))
     paths.append(pathlib.Path(__file__))
     try:
+        import repro.coherence.fabric
         import repro.core
         import repro.kernels
-        for pkg in (repro.core, repro.kernels):
+        for pkg in (repro.core, repro.kernels, repro.coherence.fabric):
             paths.extend(sorted(pathlib.Path(pkg.__file__).parent
                                 .glob("*.py")))
     except ImportError:

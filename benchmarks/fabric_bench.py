@@ -1,9 +1,10 @@
-"""Coherence-fabric benchmark: hit-rate and traffic vs. rd_lease/wr_lease.
+"""Coherence-fabric benchmark: hit-rate/traffic vs. leases + the
+batched-vs-host throughput trajectory.
 
-Drives the sharded TSU service (repro.coherence.fabric) with three host-side
-workloads and reports the full FabricStats block per scenario per lease
-setting — the production-path counterpart of the simulator's Fig. 7/8 sweeps
-(same counter names, so rows are directly comparable):
+Drives the TSU service with three host-side workloads and reports the full
+FabricStats block per scenario per lease setting — the production-path
+counterpart of the simulator's Fig. 7/8 sweeps (same counter names, so rows
+are directly comparable):
 
   shared_prefix  — multi-node serving: replicas re-read a hot set of prefix
                    blocks; a writer occasionally republishes (model refresh).
@@ -13,9 +14,22 @@ setting — the production-path counterpart of the simulator's Fig. 7/8 sweeps
   mixed_churn    — 50/50 read-write over a key space larger than the caches:
                    worst case for lease reuse, stresses victim-way eviction.
 
+plus the array-native headline (DESIGN.md §7):
+
+  batched_serving — the steady-state serving hot path (every prefix under a
+                    live lease) as batched reads: the host-object backend
+                    (one Python call per key) vs the array backend (ONE
+                    vectorized state.tier_probe per batch).  Both backends
+                    are bit-identical (tests/test_fabric_parity.py); this
+                    row is the wall-clock payoff.
+
+Results land in benchmarks/artifacts AND a root-level ``BENCH_fabric.json``
+(the repo's perf trajectory file: batched vs host ops/sec + sweep wall).
+
     PYTHONPATH=src python benchmarks/fabric_bench.py [--ops 4000] [--json PATH]
 
-Runs on CPU in well under 60 s; emits JSON to stdout and benchmarks/artifacts.
+Runs on CPU in a couple of minutes (jit compile included); emits JSON to
+stdout, benchmarks/artifacts, and BENCH_fabric.json.
 """
 from __future__ import annotations
 
@@ -29,10 +43,12 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-from repro.coherence.fabric import (FabricConfig, ReplicaCache,  # noqa: E402
-                                    SharedCache, TSUFabric)
+from repro.coherence.fabric import (ArrayFabric, FabricConfig,  # noqa: E402
+                                    HostFabric, ReplicaCache, SharedCache,
+                                    TSUFabric)
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fabric.json"
 
 LEASE_GRID = [(2, 2), (8, 4), (32, 16)]
 
@@ -112,6 +128,57 @@ SCENARIOS = {
 }
 
 
+# ------------------------------------------------- batched vs host serving
+def scenario_batched_serving(ops: int = 16384, n_hot: int = 1024,
+                             batch: int = 4096) -> dict:
+    """Steady-state batched serving: identical op streams through both
+    backends of the parity contract; reports ops/sec and the speedup.
+    Each call pools several decode rounds over the hot set (continuous
+    batching) — exactly what ``Server.serve`` does per call."""
+    cfg = FabricConfig(n_shards=4, rd_lease=8, wr_lease=4,
+                       replica_sets=512, replica_ways=8,
+                       shared_sets=1024, shared_ways=8)
+    hot = [f"prefix/{i}" for i in range(n_hot)]
+
+    rounds = max(1, batch // n_hot)     # decode rounds pooled per call
+
+    def warm(backend):
+        backend.write_batch([(k, f"{k}@0") for k in hot], replica=0)
+        backend.fence()
+        backend.read_batch(hot, replica=1)            # fill replica 1's tier
+        backend.read_batch(hot * rounds, replica=1)   # compile at bench shape
+
+    host = HostFabric(cfg, n_nodes=2, replicas_per_node=2)
+    arr = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    t0 = time.time()
+    warm(arr)
+    warm_s = time.time() - t0
+    warm(host)
+    n_batches = max(2, ops // batch)
+    rng = np.random.default_rng(0)
+    batches = [[hot[i] for _ in range(rounds)
+                for i in rng.permutation(n_hot)][:batch]
+               for _ in range(n_batches)]
+    n = n_batches * batch
+    t0 = time.time()
+    for ks in batches:
+        host.read_batch(ks, replica=1)
+    host_s = time.time() - t0
+    fb0 = arr.fast_read_batches
+    t0 = time.time()
+    for ks in batches:
+        arr.read_batch(ks, replica=1)
+    arr_s = time.time() - t0
+    return {
+        "ops": n, "batch": batch, "n_hot": n_hot,
+        "host_ops_per_sec": round(n / host_s, 1),
+        "array_ops_per_sec": round(n / arr_s, 1),
+        "batched_speedup": round(host_s / arr_s, 2),
+        "fast_batches": arr.fast_read_batches - fb0,
+        "array_warm_s": round(warm_s, 2),
+    }
+
+
 def summarize(stats):
     d = stats.to_dict()
     lookups = d["l1_hits"] + d["l1_to_l2"]
@@ -121,23 +188,46 @@ def summarize(stats):
     return d
 
 
-def run(force: bool = False) -> None:
-    """Harness entry point (benchmarks.run): cached sweep + CSV rows."""
+def write_bench_json(sweep_wall_s: float, serving: dict) -> None:
+    """Root-level perf-trajectory artifact (ISSUE 3 satellite): the
+    batched-vs-host ops/sec headline plus the lease-sweep wall-clock."""
+    BENCH_PATH.write_text(json.dumps({
+        "batched_serving": serving,
+        "lease_sweep": {"wall_s": round(sweep_wall_s, 2),
+                        "scenarios": list(SCENARIOS),
+                        "lease_grid": LEASE_GRID},
+        "_meta": {"generated_by": "benchmarks/fabric_bench.py"},
+    }, indent=1))
+    print(f"wrote {BENCH_PATH}", file=sys.stderr)
+
+
+def run(force: bool = False, mini: bool = False) -> None:
+    """Harness entry point (benchmarks.run): cached sweep + CSV rows +
+    the root-level BENCH_fabric.json trajectory file."""
     from benchmarks import common
+
+    n_ops = 500 if mini else 4000
 
     def compute():
         out = {}
+        t_sweep = time.time()
         for name, fn in SCENARIOS.items():
             out[name] = {}
             for rd, wr in LEASE_GRID:
                 t0 = time.time()
-                fabric = fn(rd, wr, 4000)
+                fabric = fn(rd, wr, n_ops)
                 row = summarize(fabric.stats)
                 row["wall_us"] = (time.time() - t0) * 1e6
                 out[name][f"rd{rd}_wr{wr}"] = row
+        out["_sweep_wall_s"] = time.time() - t_sweep
+        out["_batched_serving"] = scenario_batched_serving(
+            ops=2048 if mini else 16384)
         return out
 
-    out = common.cached("fabric_bench_suite", compute, force=force)
+    # distinct cache names: mini and full runs must never serve each
+    # other's artifact (op counts aren't part of the source fingerprint)
+    out = common.cached("fabric_bench_suite_mini" if mini
+                        else "fabric_bench_suite", compute, force=force)
     for name, grid in out.items():
         if name.startswith("_"):
             continue
@@ -146,6 +236,12 @@ def run(force: bool = False) -> None:
                         f"l1_hit={row['hit_rate_l1']};"
                         f"mm_per_op={row['mm_traffic_per_op']};"
                         f"inval={row['inval_msgs']}")
+    srv = out["_batched_serving"]
+    common.emit("fabric/batched_serving", 1e6 / srv["array_ops_per_sec"],
+                f"speedup={srv['batched_speedup']}x;"
+                f"host_ops={srv['host_ops_per_sec']};"
+                f"array_ops={srv['array_ops_per_sec']}")
+    write_bench_json(out["_sweep_wall_s"], srv)
 
 
 def main():
@@ -154,6 +250,8 @@ def main():
                     help="approximate client ops per scenario")
     ap.add_argument("--json", type=pathlib.Path,
                     default=ART / "fabric_bench.json")
+    ap.add_argument("--skip-batched", action="store_true",
+                    help="lease sweep only (no jit compile; fast smoke)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -169,6 +267,14 @@ def main():
                   f"mm/op={row['mm_traffic_per_op']:.3f} "
                   f"inval={row['inval_msgs']} "
                   f"self_inval={row['self_invalidations']}", flush=True)
+    sweep_wall = time.time() - t0
+    if not args.skip_batched:
+        srv = scenario_batched_serving(ops=max(2048, min(args.ops * 4, 16384)))
+        out["batched_serving"] = srv
+        print(f"batched_serving host={srv['host_ops_per_sec']:,.0f} ops/s "
+              f"array={srv['array_ops_per_sec']:,.0f} ops/s "
+              f"speedup={srv['batched_speedup']}x", flush=True)
+        write_bench_json(sweep_wall, srv)
     out["_meta"] = {"ops": args.ops, "lease_grid": LEASE_GRID,
                     "wall_s": round(time.time() - t0, 2)}
     args.json.parent.mkdir(parents=True, exist_ok=True)

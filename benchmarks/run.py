@@ -9,6 +9,11 @@ sweep engine (one jit per grid, DESIGN.md §5) and writes one consolidated
 artifact ``benchmarks/artifacts/figures.json`` (``figures_mini.json`` with
 ``--mini`` — the CI footprint: 2 configs x 2 benchmarks, small ROUNDS).
 
+The ``fabric`` suite additionally writes the ROOT-LEVEL perf-trajectory
+file ``BENCH_fabric.json`` (batched-vs-host serving ops/sec + lease-sweep
+wall-clock; DESIGN.md §7) — ``--mini`` shrinks its op counts to the CI
+footprint.
+
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 """
 import argparse
@@ -44,8 +49,9 @@ def main() -> None:
                     help="figures: fig7+fig8+fig9 via the batched sweep "
                          "engine, consolidated into one JSON artifact")
     ap.add_argument("--mini", action="store_true",
-                    help="CI footprint for --suite figures (2 configs x "
-                         "2 benchmarks, small ROUNDS)")
+                    help="CI footprint: --suite figures runs 2 configs x "
+                         "2 benchmarks with small ROUNDS; the fabric suite "
+                         "shrinks its op counts")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -54,6 +60,8 @@ def main() -> None:
         return
 
     only = set(args.only.split(",")) if args.only else None
+    import functools
+
     from benchmarks import (fabric_bench, fig2_rdma_gap, fig7_speedup,
                             fig8_scaling, fig9_xtreme, kernel_bench,
                             lease_sensitivity, roofline)
@@ -65,7 +73,7 @@ def main() -> None:
         ("lease", lease_sensitivity.main),
         ("kernels", kernel_bench.main),
         ("roofline", roofline.main),
-        ("fabric", fabric_bench.run),
+        ("fabric", functools.partial(fabric_bench.run, mini=args.mini)),
     ]
     failed = []
     for name, fn in suites:

@@ -1,15 +1,23 @@
 """Coherence fabric: the sharded TSU service behind every lease in the repo.
 
-Layout (DESIGN.md §3):
-  tsu.py    — TSUShard / TSUFabric: the MM+TSU authority, key-hash sharded
-  cache.py  — ReplicaCache over SharedCache: the host L1-over-L2 client tiers
-  writeq.py — WriteQueue: bounded posted write-throughs + fence
-  stats.py  — FabricStats: the engine.COUNTERS-compatible telemetry block
+Layout (DESIGN.md §3, §7):
+  backend.py — FabricBackend: the one lease API; HostFabric = the
+               host-object oracle behind it
+  arrays.py  — ArrayFabric: the array-native production backend (state as
+               core.state pytrees, ops applied as one jitted scan)
+  tsu.py     — TSUShard / TSUFabric: the host MM+TSU authority
+  cache.py   — ReplicaCache over SharedCache: the host L1-over-L2 tiers
+  writeq.py  — WriteQueue: bounded posted write-throughs + fence
+  stats.py   — FabricStats: the engine.COUNTERS-compatible telemetry block
 
 `repro.coherence.kv_lease` (serving) and `repro.coherence.lease_sync`
-(training) are thin adapters over this package; the hierarchy simulator
-(`repro.core.engine`) is the same protocol run under a timing model.
+(training) are thin adapters over the backend; the hierarchy simulator
+(`repro.core.engine`) is the same protocol run under a timing model, and
+both import their transition rules from `repro.core.state`.
 """
+from repro.coherence.fabric.arrays import ArrayFabric  # noqa: F401
+from repro.coherence.fabric.backend import (FabricBackend,  # noqa: F401
+                                            HostFabric, Op)
 from repro.coherence.fabric.cache import ReplicaCache, SharedCache  # noqa: F401
 from repro.coherence.fabric.stats import FabricStats  # noqa: F401
 from repro.coherence.fabric.tsu import (FabricConfig, LeaseGrant,  # noqa: F401

@@ -1,0 +1,810 @@
+"""Array-native coherence fabric: the whole TSU service as device arrays.
+
+This is the production implementation of the ``FabricBackend`` contract
+(backend.py).  All coherence state lives in ``core.state`` pytrees:
+
+  * sharded TSU+MM   — a ``[n_shards, capacity]`` table (``TSUState`` with
+    one fully-associative set per shard) plus version / allocation-order /
+    write-sequence side arrays,
+  * replica tier     — ``TierState`` ``[n_replicas, sets, ways+1]``,
+  * node-shared tier — ``TierState`` ``[n_nodes, sets, ways+1]``,
+  * write queue      — a bounded ring per node, drained in-scan,
+
+and a batch of ops is applied as ONE jitted ``lax.scan`` (``apply``): each
+step dispatches on the op kind and runs the same transition sequence the
+host objects execute per key — probe, self-invalidate on expiry, descend,
+TSU grant (16-bit overflow reinit included), install back up — with every
+lease decision served by ``core.state`` (→ ``core.protocol`` + the Pallas
+lease-probe kernel).  No timestamp rule is implemented here: this file is
+routing, gating and bookkeeping over the shared transition layer.
+
+Values (the actual cached payloads — KV blocks, parameter blobs) stay on
+the host: every MM write is stamped with a globally unique write sequence
+number (``gseq``) carried alongside each cached line, and the wrapper maps
+``gseq -> value``.  The arrays decide *everything* (hits, grants, versions,
+evictions); the host only moves payloads per the returned plan.
+
+Bit-identical to ``HostFabric`` on any op trace — grants, hit levels,
+versions, and the full ``FabricStats`` block (tests/test_fabric_parity.py,
+DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.coherence.fabric.backend import (GRANT_LOG_LEN, FabricBackend,
+                                            Op, _bounded)
+from repro.coherence.fabric.tsu import FabricConfig, stable_hash
+from repro.core import protocol
+from repro.core import state as S
+from repro.core.state import TSUState, TierState
+
+_NOP, _READ, _WRITE, _FENCE, _MM_WRITE, _PUBLISH, _MM_READ = range(7)
+_PRUNE_EVERY = 4096          # payload-map GC cadence, in completed writes
+_KIND = {"read": _READ, "write": _WRITE, "fence": _FENCE,
+         "mm_write": _MM_WRITE, "publish": _PUBLISH, "mm_read": _MM_READ}
+
+# global counters (the FabricStats names this backend can ever bump);
+# wb_evictions / inval_msgs are 0 by construction, as the paper claims.
+_G_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2", "l2_to_mm",
+           "coh_miss_l1", "coh_miss_l2", "pcie_blocks", "write_throughs",
+           "self_invalidations", "compulsory", "refetches",
+           "capacity_evictions", "tsu_evictions", "overflow_reinits",
+           "fences")
+# the per-replica mirror subset (host ReplicaCache.stats semantics)
+_R_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2",
+           "coh_miss_l1", "coh_miss_l2", "self_invalidations", "compulsory",
+           "refetches", "capacity_evictions", "write_throughs")
+_GI = {k: i for i, k in enumerate(_G_KEYS)}
+_RI = {k: i for i, k in enumerate(_R_KEYS)}
+
+
+class _AF(NamedTuple):
+    """The device-resident fabric state."""
+
+    rp: TierState            # replica tier [R, S1, W1+1]
+    rp_gseq: jnp.ndarray     # write-sequence id per line (payload handle)
+    rp_tick: jnp.ndarray     # [R] LRU tick (host _SetAssoc._tick semantics)
+    sh: TierState            # shared tier [Nn, S2, W2+1]
+    sh_gseq: jnp.ndarray
+    sh_tick: jnp.ndarray     # [Nn]
+    tsu: TSUState            # [Ks, 1, cap+1]
+    tsu_ver: jnp.ndarray     # per-entry version (resets on realloc)
+    tsu_gseq: jnp.ndarray
+    tsu_seq: jnp.ndarray     # allocation order (victim tie-break)
+    tsu_nseq: jnp.ndarray    # [Ks] next allocation seq
+    gseq_next: jnp.ndarray   # global write-sequence counter
+    wq: Dict[str, jnp.ndarray]   # ring fields [Nn, Q]
+    wq_head: jnp.ndarray     # [Nn]
+    wq_len: jnp.ndarray      # [Nn]
+    g: jnp.ndarray           # global counters [len(_G_KEYS)]
+    r: jnp.ndarray           # per-replica counters [R, len(_R_KEYS)]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@functools.lru_cache(maxsize=32)
+def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
+    """The jitted op-scan for one static geometry.  Cached so every
+    ArrayFabric instance with the same shape shares one compilation."""
+    i32 = jnp.int32
+    one = jnp.ones((), i32)
+    zero = jnp.zeros((), i32)
+    NG, NRK = len(_G_KEYS), len(_R_KEYS)
+    b2i = lambda b: b.astype(i32)
+
+    def gv(**kw):
+        """One [NG] increment vector — a single add per counter block."""
+        out = jnp.zeros((NG,), i32)
+        return out.at[jnp.array([_GI[k] for k in kw], i32)].add(
+            jnp.stack([b2i(v) if v.dtype == bool else v
+                       for v in kw.values()]))
+
+    def rv(**kw):
+        out = jnp.zeros((NRK,), i32)
+        return out.at[jnp.array([_RI[k] for k in kw], i32)].add(
+            jnp.stack([b2i(v) if v.dtype == bool else v
+                       for v in kw.values()]))
+
+    def probe1(tier, idx, st, key, mwts, mrts):
+        out = S.tier_probe(tier, idx[None], st[None], key[None],
+                           mwts[None], mrts[None])
+        return tuple(o[0] for o in out)
+
+    def touch(tier, tick, idx, st, key, active):
+        """Host probe semantics: on a tag match, bump the store tick and
+        refresh the line's LRU (even if the lease is dead)."""
+        th, hit, way, _, _, _, _ = probe1(tier, idx, st, key, zero, zero)
+        th, hit = th & active, hit & active
+        tick2 = tick.at[idx].add(b2i(th))
+        w = jnp.where(th, way, tier.n_ways)
+        lru2 = tier.lru.at[idx, st, w].set(
+            jnp.where(th, tick2[idx], tier.lru[idx, st, w]))
+        return tier._replace(lru=lru2), tick2, th, hit, way
+
+    def drop(tier, idx, st, way, cond):
+        w = jnp.where(cond, way, tier.n_ways)
+        return tier._replace(tag=tier.tag.at[idx, st, w].set(
+            jnp.where(cond, S.INVALID, tier.tag[idx, st, w])))
+
+    def install_at(tier, gseq_a, tick, idx, st, key, wts, rts, ver, gs,
+                   th, way, active):
+        """Host install semantics with the same-key probe precomputed:
+        tick++, in-place on ``(th, way)``, else the victim way (invalid
+        first, then LRU); reports displacement of a live different-key
+        line (a capacity eviction)."""
+        vic = S.victim(tier.tag, tier.lru, idx[None], st[None])[0]
+        w0 = jnp.where(th, way, vic)
+        evicted = active & ~th & (tier.tag[idx, st, w0] != S.INVALID)
+        tick2 = tick.at[idx].add(b2i(active))
+        w = jnp.where(active, w0, tier.n_ways)
+
+        def pt(a, v):
+            return a.at[idx, st, w].set(jnp.where(active, v, a[idx, st, w]))
+
+        tier2 = TierState(tag=pt(tier.tag, key), wts=pt(tier.wts, wts),
+                          rts=pt(tier.rts, rts), ver=pt(tier.ver, ver),
+                          lru=pt(tier.lru, tick2[idx]), cts=tier.cts)
+        return tier2, pt(gseq_a, gs), tick2, evicted
+
+    F = jnp.zeros((), bool)
+
+    def fill(tier, gseq_a, tick, idx, st, key, wts, rts, ver, gs, active):
+        """A fill after a miss: the key cannot be present (an expired line
+        was already dropped), so the install always takes the victim way."""
+        return install_at(tier, gseq_a, tick, idx, st, key, wts, rts, ver,
+                          gs, F, zero, active)
+
+    def tsu_probe(af, shard, key):
+        th, way = S.probe(af.tsu.tag, shard[None], zero[None], key[None])
+        return th[0], way[0]
+
+    def mm_write1(af, key, shard, wl, rd, wr, active):
+        """TSUShard.mm_write: allocate (evicting the min-(memts, alloc-seq)
+        entry when the shard is full), grant via Algorithm 3 + overflow
+        reinit, bump the version."""
+        th, way = tsu_probe(af, shard, key)
+        vic = S.victim_lex(af.tsu.tag, af.tsu.memts, af.tsu_seq,
+                           shard[None], zero[None])[0]
+        full = (af.tsu.tag[shard, 0][:CAP] != S.INVALID).all()
+        evict = active & ~th & full
+        w0 = jnp.where(th, way, vic)
+        memts = jnp.where(th, af.tsu.memts[shard, 0, w0], 0)
+        wl_eff = jnp.where(wl >= 0, wl, wr)
+        gr = S.tsu_lease(memts[None], jnp.ones((1,), bool), rd, wl_eff[None])
+        mwts, mrts, nmem, ovf = (gr.wts[0], gr.rts[0], gr.new_memts[0],
+                                 gr.overflow[0])
+        ver = jnp.where(th, af.tsu_ver[shard, 0, w0] + 1, 1)
+        seqv = jnp.where(th, af.tsu_seq[shard, 0, w0], af.tsu_nseq[shard])
+        gs = af.gseq_next
+        tsu2 = S.tsu_commit_exact(af.tsu, shard[None], zero[None], w0[None],
+                                  key[None], nmem[None], active[None])
+        w = jnp.where(active, w0, CAP)
+
+        def pt(a, v):
+            return a.at[shard, 0, w].set(
+                jnp.where(active, v, a[shard, 0, w]))
+
+        af = af._replace(
+            tsu=tsu2, tsu_ver=pt(af.tsu_ver, ver),
+            tsu_gseq=pt(af.tsu_gseq, gs), tsu_seq=pt(af.tsu_seq, seqv),
+            tsu_nseq=af.tsu_nseq.at[shard].add(b2i(active & ~th)),
+            gseq_next=af.gseq_next + b2i(active),
+            g=af.g + gv(tsu_evictions=evict, overflow_reinits=active & ovf))
+        return af, mwts, mrts, ver, gs
+
+    def mm_read1(af, key, shard, rd, wr, active):
+        """TSUShard.mm_read: grant only if the entry exists."""
+        th, way = tsu_probe(af, shard, key)
+        found = active & th
+        memts = jnp.where(th, af.tsu.memts[shard, 0, way], 0)
+        gr = S.tsu_lease(memts[None], jnp.zeros((1,), bool), rd, wr)
+        mwts, mrts, nmem, ovf = (gr.wts[0], gr.rts[0], gr.new_memts[0],
+                                 gr.overflow[0])
+        tsu2 = S.tsu_commit_exact(af.tsu, shard[None], zero[None],
+                                  way[None], key[None], nmem[None],
+                                  found[None])
+        ver = jnp.where(found, af.tsu_ver[shard, 0, way], -1)
+        gs = jnp.where(found, af.tsu_gseq[shard, 0, way], -1)
+        af = af._replace(tsu=tsu2,
+                         g=af.g + gv(overflow_reinits=found & ovf))
+        return af, found, mwts, mrts, ver, gs
+
+    def drain1(af, node, rd, wr, active):
+        """WriteQueue._drain_one: pop the oldest posted write, write through
+        to the TSU, adopt the grant into the node tier, then install the
+        ADOPTED lease into the submitting replica (the engine's L2-then-L1
+        response chain)."""
+        h = af.wq_head[node]
+        key = af.wq["key"][node, h]
+        rep = af.wq["rep"][node, h]
+        wl = af.wq["wl"][node, h]
+        shard = af.wq["shard"][node, h]
+        s1 = af.wq["set1"][node, h]
+        s2 = af.wq["set2"][node, h]
+        af = af._replace(
+            wq_head=af.wq_head.at[node].set(jnp.where(active, (h + 1) % Q, h)),
+            wq_len=af.wq_len.at[node].add(-b2i(active)),
+            g=af.g + gv(l2_to_mm=active, write_throughs=active,
+                        pcie_blocks=active & (shard != node % KS)))
+        af, mwts, mrts, ver, gs = mm_write1(af, key, shard, wl, rd, wr,
+                                            active)
+        # adopt into the node-shared tier (grant lease, node clock advance)
+        thA, _, wayA, _, nwA, nrA, ncA = probe1(af.sh, node, s2, key,
+                                                mwts, mrts)
+        af = af._replace(sh=af.sh._replace(cts=af.sh.cts.at[node].set(
+            jnp.where(active, ncA, af.sh.cts[node]))))
+        sh2, shg2, sht2, ev1 = install_at(af.sh, af.sh_gseq, af.sh_tick,
+                                          node, s2, key, nwA, nrA, ver, gs,
+                                          thA, wayA, active)
+        # install the adopted lease into the submitting replica
+        thB, _, wayB, _, nwB, nrB, ncB = probe1(af.rp, rep, s1, key,
+                                                nwA, nrA)
+        af = af._replace(
+            sh=sh2, sh_gseq=shg2, sh_tick=sht2,
+            rp=af.rp._replace(cts=af.rp.cts.at[rep].set(
+                jnp.where(active, ncB, af.rp.cts[rep]))),
+            r=af.r.at[rep].add(rv(write_throughs=active)))
+        rp2, rpg2, rpt2, ev2 = install_at(af.rp, af.rp_gseq, af.rp_tick,
+                                          rep, s1, key, nwB, nrB, ver, gs,
+                                          thB, wayB, active)
+        af = af._replace(
+            rp=rp2, rp_gseq=rpg2, rp_tick=rpt2,
+            g=af.g + gv(capacity_evictions=b2i(ev1) + b2i(ev2)),
+            r=af.r.at[rep].add(rv(capacity_evictions=ev2)))
+        entry = (jnp.where(active, key, -1), ver, mwts, mrts, gs)
+        return af, entry
+
+    def _flush_node(carry, node, rd, wr):
+        def cond(c):
+            return c[0].wq_len[node] > 0
+
+        def body(c):
+            af_, dk, dv, dw, dr_, dg, dc = c
+            af_, e = drain1(af_, node, rd, wr, jnp.bool_(True))
+            return (af_, dk.at[dc].set(e[0]), dv.at[dc].set(e[1]),
+                    dw.at[dc].set(e[2]), dr_.at[dc].set(e[3]),
+                    dg.at[dc].set(e[4]), dc + 1)
+
+        return jax.lax.while_loop(cond, body, carry)
+
+    def run(af, xs, rd, wr):
+        ldz = jnp.full((LD,), -1, i32)
+        negs = jnp.full((), -1, i32)
+
+        def step(af, x):
+            kind, rep, node, key, s1, s2, shard, wl = (
+                x["kind"], x["rep"], x["node"], x["key"], x["set1"],
+                x["set2"], x["shard"], x["wl"])
+            is_read = kind == _READ
+            is_write = kind == _WRITE
+            is_fence = kind == _FENCE
+            is_mmw = kind == _MM_WRITE
+            is_pub = kind == _PUBLISH
+            is_mmr = kind == _MM_READ
+            home_miss = shard != node % KS
+
+            # ---- replica probe: serves the read lookup AND the posted
+            # write's pending-line placement (ReplicaCache.get / .put)
+            rp2, rpt2, th1, h1, way1 = touch(af.rp, af.rp_tick, rep, s1,
+                                             key, is_read)
+            af = af._replace(rp=rp2, rp_tick=rpt2)
+            hit_ver = af.rp.ver[rep, s1, way1]
+            hit_gs = af.rp_gseq[rep, s1, way1]
+            miss = is_read & ~h1
+            coh = miss & th1
+            comp = miss & ~th1
+            af = af._replace(rp=drop(af.rp, rep, s1, way1, coh))
+            # pending line (store-buffer forwarding): wts=rts=cts, ver=-1
+            thP, _, wayP, _, _, _, _ = probe1(af.rp, rep, s1, key,
+                                              zero, zero)
+            cts = af.rp.cts[rep]
+            rpP, rpgP, rptP, evP = install_at(
+                af.rp, af.rp_gseq, af.rp_tick, rep, s1, key, cts, cts,
+                negs, negs, thP, wayP, is_write)
+            af = af._replace(rp=rpP, rp_gseq=rpgP, rp_tick=rptP)
+
+            # ---- shared probe (SharedCache.get, only on a replica miss)
+            sh2, sht2, th2, h2, way2 = touch(af.sh, af.sh_tick, node, s2,
+                                             key, miss)
+            af = af._replace(sh=sh2, sh_tick=sht2)
+            sh_ver = af.sh.ver[node, s2, way2]
+            sh_gs = af.sh_gseq[node, s2, way2]
+            sh_wts = af.sh.wts[node, s2, way2]
+            sh_rts = af.sh.rts[node, s2, way2]
+            coh2 = miss & th2 & ~h2
+            af = af._replace(sh=drop(af.sh, node, s2, way2, coh2))
+
+            # ---- MM/TSU access (fabric.read for misses + raw mm_read;
+            # mm_write/publish behind a cond — rare on the serving path)
+            need_mm = miss & ~h2
+            af, fndR, mwtsR, mrtsR, mverR, mgsR = mm_read1(
+                af, key, shard, rd, wr, need_mm | is_mmr)
+            do_mmw = is_mmw | is_pub
+
+            def _mmw(af):
+                return mm_write1(af, key, shard, wl, rd, wr,
+                                 jnp.ones((), bool))
+
+            def _mmw_skip(af):
+                return af, zero, zero, zero, zero
+
+            af, mwtsW, mrtsW, mverW, mgsW = jax.lax.cond(
+                do_mmw, _mmw, _mmw_skip, af)
+            mm_used = (need_mm & fndR) | is_mmr & fndR | do_mmw
+            mwts = jnp.where(do_mmw, mwtsW, mwtsR)
+            mrts = jnp.where(do_mmw, mrtsW, mrtsR)
+            mver = jnp.where(do_mmw, mverW, mverR)
+            mgs = jnp.where(do_mmw, mgsW, mgsR)
+
+            # ---- shared-tier install: the read fill (always a victim way
+            # — the expired line was dropped) and the publish adopt share
+            # one probe+install-math call
+            thA, _, wayA, _, nwA, nrA, ncA = probe1(af.sh, node, s2, key,
+                                                    mwts, mrts)
+            af = af._replace(sh=af.sh._replace(cts=af.sh.cts.at[node].set(
+                jnp.where(is_pub, ncA, af.sh.cts[node]))))
+            fill_sh = (need_mm & fndR) | is_pub
+            sh3, shg3, sht3, evF = install_at(af.sh, af.sh_gseq, af.sh_tick,
+                                              node, s2, key, nwA, nrA,
+                                              mver, mgs, thA, wayA, fill_sh)
+            af = af._replace(sh=sh3, sh_gseq=shg3, sh_tick=sht3)
+
+            # ---- response travelling up to the replica (read path)
+            fndF = need_mm & fndR
+            resp_found = h2 | fndF
+            resp_ver = jnp.where(h2, sh_ver, mver)
+            resp_gs = jnp.where(h2, sh_gs, mgs)
+            resp_wts = jnp.where(h2, sh_wts, nwA)
+            resp_rts = jnp.where(h2, sh_rts, nrA)
+            nw1, nr1, _ = S.install_lease(af.rp.cts[rep], resp_wts,
+                                          resp_rts)
+            rp3, rpg3, rpt3, ev1 = fill(af.rp, af.rp_gseq, af.rp_tick,
+                                        rep, s1, key, nw1, nr1,
+                                        resp_ver, resp_gs, resp_found)
+            af = af._replace(rp=rp3, rp_gseq=rpg3, rp_tick=rpt3)
+
+            # ---- posted write-through: ring push + bounded drain
+            t = (af.wq_head[node] + af.wq_len[node]) % Q
+            vals = {"key": key, "rep": rep, "wl": wl, "shard": shard,
+                    "set1": s1, "set2": s2}
+            wq2 = {k: a.at[node, t].set(
+                jnp.where(is_write, vals[k], a[node, t]))
+                for k, a in af.wq.items()}
+            af = af._replace(wq=wq2,
+                             wq_len=af.wq_len.at[node].add(b2i(is_write)))
+            need_drain = is_write & (af.wq_len[node] > MAXIF)
+
+            def _dr(af):
+                return drain1(af, node, rd, wr, jnp.ones((), bool))
+
+            def _dr_skip(af):
+                return af, (negs, negs, negs, negs, negs)
+
+            af, e = jax.lax.cond(need_drain, _dr, _dr_skip, af)
+            dk = ldz.at[0].set(e[0])
+            dv = ldz.at[0].set(e[1])
+            dw = ldz.at[0].set(e[2])
+            dr_ = ldz.at[0].set(e[3])
+            dg = ldz.at[0].set(e[4])
+            dc = b2i(need_drain)
+
+            # ---- fence: flush every queue (node order), clocks jump to
+            # the global max (rare -> behind a cond)
+            def _fence(af):
+                carry = (af, ldz, ldz, ldz, ldz, ldz, zero)
+                for nd in range(NN):
+                    carry = _flush_node(carry, jnp.int32(nd), rd, wr)
+                af, fk, fv, fw, fr_, fg, fc = carry
+                gmax = jnp.maximum(jnp.max(af.rp.cts), jnp.max(af.sh.cts))
+                af = af._replace(
+                    rp=af.rp._replace(cts=jnp.full_like(af.rp.cts, gmax)),
+                    sh=af.sh._replace(cts=jnp.full_like(af.sh.cts, gmax)))
+                return af, (fk, fv, fw, fr_, fg, fc, gmax)
+
+            def _fence_skip(af):
+                return af, (dk, dv, dw, dr_, dg, dc, zero)
+
+            af, (dk, dv, dw, dr_, dg, dc, gmax) = jax.lax.cond(
+                is_fence, _fence, _fence_skip, af)
+
+            # ---- counters: one vector add per block
+            af = af._replace(
+                g=af.g + gv(
+                    reads=is_read, writes=is_write, l1_hits=h1, l2_hits=h2,
+                    l1_to_l2=b2i(miss) + b2i(is_write), coh_miss_l1=coh,
+                    coh_miss_l2=coh2,
+                    self_invalidations=b2i(coh) + b2i(coh2),
+                    compulsory=comp,
+                    l2_to_mm=b2i(need_mm) + b2i(is_mmr) + b2i(do_mmw),
+                    pcie_blocks=need_mm & home_miss,
+                    write_throughs=do_mmw, fences=is_fence,
+                    refetches=resp_found,
+                    capacity_evictions=b2i(evP) + b2i(evF) + b2i(ev1)),
+                r=af.r.at[rep].add(rv(
+                    reads=is_read, writes=is_write, l1_hits=h1, l2_hits=h2,
+                    l1_to_l2=b2i(miss) + b2i(is_write), coh_miss_l1=coh,
+                    coh_miss_l2=coh2,
+                    self_invalidations=b2i(coh) + b2i(coh2),
+                    compulsory=comp, refetches=resp_found,
+                    # a publish adopt's eviction hits fabric stats only
+                    capacity_evictions=(b2i(evP) + b2i(evF & fndF)
+                                        + b2i(ev1)))))
+
+            # ---- per-op result record
+            found = (is_read & (h1 | resp_found)) | (mm_used & ~is_fence)
+            version = jnp.where(
+                is_read, jnp.where(h1, hit_ver,
+                                   jnp.where(resp_found, resp_ver, -1)),
+                jnp.where(mm_used, mver, -1))
+            gseq = jnp.where(
+                is_read, jnp.where(h1, hit_gs,
+                                   jnp.where(resp_found, resp_gs, -1)),
+                jnp.where(mm_used, mgs, -1))
+            level = jnp.where(
+                ~is_read, -1,
+                jnp.where(h1, 0, jnp.where(h2, 1, jnp.where(fndF, 2, 3))))
+            res = dict(found=b2i(found), version=version, gseq=gseq,
+                       level=level, wts=jnp.where(mm_used, mwts, 0),
+                       rts=jnp.where(mm_used, mrts, 0),
+                       mm_used=b2i(mm_used), gmax=gmax, dlog_key=dk,
+                       dlog_ver=dv, dlog_wts=dw, dlog_rts=dr_, dlog_gseq=dg,
+                       dcount=dc)
+            return af, res
+
+        return jax.lax.scan(step, af, xs)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=4)
+def _build_fast_read():
+    """Phase 1 of the two-phase batched read (backend.read_batch contract):
+    ONE vectorized ``state.tier_probe`` over the whole batch serves every
+    replica-tier lease hit — reads under a live lease are pure local
+    arithmetic, the paper's serving claim — with sequential touch
+    semantics (op i's LRU = tick + its rank among the batch's hits).
+    Misses are untouched here; the caller runs them through the exact
+    op-scan in op order (phase 2).  Only the replica-tier sub-state flows
+    through the call, keeping dispatch overhead off the hot path."""
+    i32 = jnp.int32
+
+    def fast(rp, rp_gseq, rp_tick, g, r, meta_s1, kids, rep):
+        B = kids.shape[0]
+        z = jnp.zeros((B,), i32)
+        reps = jnp.full((B,), rep, i32)
+        s1s = meta_s1[kids]
+        th, hit, way, _, _, _, _ = S.tier_probe(rp, reps, s1s, kids, z, z)
+        hi = hit.astype(i32)
+        rank = jnp.cumsum(hi)            # hit rank (single replica per call)
+        w = jnp.where(hit, way, rp.n_ways)
+        # .max == sequential .set here: lru values are past ticks, and a
+        # duplicate key's later touch carries the larger rank
+        lru2 = rp.lru.at[reps, s1s, w].max(rp_tick[rep] + rank)
+        ver = rp.ver[reps, s1s, way]
+        gseq = rp_gseq[reps, s1s, way]
+        # single replica per call -> every counter update is one scalar op
+        nh = jnp.sum(hi)
+        tick2 = rp_tick.at[rep].add(nh)
+        g2 = g.at[_GI["reads"]].add(nh).at[_GI["l1_hits"]].add(nh)
+        r2 = r.at[rep, _RI["reads"]].add(nh)
+        r2 = r2.at[rep, _RI["l1_hits"]].add(nh)
+        # only the MODIFIED arrays travel back — the untouched tier fields
+        # stay resident — and the per-op outputs are packed into one
+        # transfer, keeping the hot-path call payload minimal
+        return jnp.stack([hi, ver, gseq]), lru2, tick2, g2, r2
+
+    return jax.jit(fast)
+
+
+class ArrayFabric(FabricBackend):
+    """The array-native fabric: ``FabricBackend`` over one jitted op-scan.
+
+    ``apply(ops)`` encodes the batch into int32 op arrays (keys are interned
+    to dense ids; set indexes and shard routes precomputed with the same
+    ``stable_hash`` the host stores use), runs the scan, then replays the
+    returned plan on the host-side payload map.  Batches are padded to
+    power-of-two lengths so compilations are reused across batch sizes.
+    """
+
+    def __init__(self, cfg: FabricConfig = FabricConfig(),
+                 n_nodes: int = 1, replicas_per_node: int = 1):
+        self.cfg = cfg = _bounded(cfg)
+        self.n_nodes = n_nodes
+        self.n_replicas = n_nodes * replicas_per_node
+        self._rpn = replicas_per_node
+        self._S1 = max(1, cfg.replica_sets)
+        self._W1 = max(1, cfg.replica_ways)
+        self._S2 = max(1, cfg.shared_sets)
+        self._W2 = max(1, cfg.shared_ways)
+        self._KS = cfg.n_shards
+        self._CAP = cfg.tsu_capacity
+        self._Q = cfg.max_in_flight + 2
+        self._LD = n_nodes * cfg.max_in_flight + 1
+        self._run = _build_run(self._S1, self._W1, self._S2, self._W2,
+                               self._KS, self._CAP, n_nodes,
+                               self.n_replicas, self._Q, cfg.max_in_flight,
+                               self._LD)
+        self._af = self._init_af()
+        # host-side payload plumbing (the arrays decide; this only ships)
+        self._keys: Dict = {}
+        self._key_list: List = []
+        self._meta = np.zeros((64, 3), np.int32)    # kid -> set1, set2, shard
+        self._vals: Dict[int, object] = {}          # gseq -> value
+        self._pending: Dict[Tuple[int, int], object] = {}
+        self._pending_n: Dict[Tuple[int, int], int] = {}   # in-flight count
+        self._qmirror = [collections.deque() for _ in range(n_nodes)]
+        # bounded on BOTH backends with the same cap, so parity-compared
+        # logs truncate identically (oracle traces are far shorter)
+        self.grant_log = collections.deque(maxlen=GRANT_LOG_LEN)
+        self._fast_read = _build_fast_read()
+        self._meta_dev = None           # device-side kid -> set1 table
+        self.fast_read_batches = 0      # telemetry: all-hit batches served
+        self._writes_since_prune = 0
+
+    def _init_af(self) -> _AF:
+        i32 = jnp.int32
+        z = lambda *s: jnp.zeros(s, i32)
+        neg = lambda *s: jnp.full(s, -1, i32)
+        Nn, R = self.n_nodes, self.n_replicas
+        return _AF(
+            rp=S.init_tier(R, self._S1, self._W1),
+            rp_gseq=neg(R, self._S1, self._W1 + 1), rp_tick=z(R),
+            sh=S.init_tier(Nn, self._S2, self._W2),
+            sh_gseq=neg(Nn, self._S2, self._W2 + 1), sh_tick=z(Nn),
+            tsu=S.init_tsu(self._KS, 1, self._CAP),
+            tsu_ver=z(self._KS, 1, self._CAP + 1),
+            tsu_gseq=neg(self._KS, 1, self._CAP + 1),
+            tsu_seq=z(self._KS, 1, self._CAP + 1), tsu_nseq=z(self._KS),
+            gseq_next=jnp.zeros((), i32),
+            wq={k: z(Nn, self._Q) for k in
+                ("key", "rep", "wl", "shard", "set1", "set2")},
+            wq_head=z(Nn), wq_len=z(Nn),
+            g=z(len(_G_KEYS)), r=z(R, len(_R_KEYS)),
+        )
+
+    # ------------------------------------------------------------- keys
+    def _kid(self, key) -> int:
+        kid = self._keys.get(key)
+        if kid is None:
+            kid = len(self._key_list)
+            self._keys[key] = kid
+            self._key_list.append(key)
+            if kid >= self._meta.shape[0]:
+                self._meta = np.concatenate(
+                    [self._meta, np.zeros_like(self._meta)], axis=0)
+            h = stable_hash(key)
+            self._meta[kid] = (h % self._S1, h % self._S2, h % self._KS)
+            self._meta_dev = None        # device copy is stale
+        return kid
+
+    # ------------------------------------------------------------ apply
+    def apply(self, ops: Sequence[Op]):
+        B0 = len(ops)
+        if B0 == 0:
+            return []
+        B = max(8, _next_pow2(B0))
+        enc = {k: np.zeros((B,), np.int32) for k in
+               ("kind", "rep", "node", "key", "set1", "set2", "shard", "wl")}
+        for i, op in enumerate(ops):
+            enc["kind"][i] = _KIND[op.kind]
+            if op.kind == "fence":
+                continue
+            kid = self._kid(op.key)
+            s1, s2, shard = self._meta[kid]
+            rep = op.replica
+            node = (op.node if op.kind == "publish"
+                    else rep // self._rpn)
+            enc["rep"][i] = rep
+            enc["node"][i] = node
+            enc["key"][i] = kid
+            enc["set1"][i] = s1
+            enc["set2"][i] = s2
+            enc["shard"][i] = shard
+            enc["wl"][i] = -1 if op.wr_lease is None else op.wr_lease
+        self._af, res = self._run(self._af,
+                                  {k: jnp.asarray(v) for k, v in enc.items()},
+                                  jnp.int32(self.cfg.rd_lease),
+                                  jnp.int32(self.cfg.wr_lease))
+        res = jax.device_get(res)
+        out = [(op, self._decode(op, res, i)) for i, op in enumerate(ops)]
+        if self._writes_since_prune >= _PRUNE_EVERY:
+            self.prune_payloads()       # after decode: results already out
+        return out
+
+    def prune_payloads(self) -> None:
+        """Drop payload versions no longer referenced by any device-side
+        line or TSU entry.  HostFabric sheds values implicitly when a dict
+        entry / cache line is evicted; here payloads are named by gseq
+        handles, so an explicit sweep against the live handle set keeps
+        host memory bounded on long-running serving paths."""
+        live = set()
+        for a in (self._af.rp_gseq, self._af.sh_gseq, self._af.tsu_gseq):
+            live.update(np.unique(np.asarray(a)).tolist())
+        self._vals = {g: v for g, v in self._vals.items() if g in live}
+        self._writes_since_prune = 0
+
+    def _drains(self, res, i, node: Optional[int] = None) -> None:
+        """Replay the op's drain log on the payload map + grant log.  A
+        write op drains its own node's queue; a fence drains every queue in
+        node order (node=None -> pop the first non-empty mirror)."""
+        for j in range(int(res["dcount"][i])):
+            dk = int(res["dlog_key"][i][j])
+            nd = (node if node is not None else
+                  next(n for n in range(self.n_nodes) if self._qmirror[n]))
+            mk, mval, mrep = self._qmirror[nd].popleft()
+            assert mk == dk, "queue mirror diverged from the in-scan ring"
+            self._vals[int(res["dlog_gseq"][i][j])] = mval
+            self._writes_since_prune += 1
+            # last in-flight write for (rep, key) drained: the replica line
+            # now carries a real gseq, so the store-buffer copy can go
+            n = self._pending_n.get((mrep, mk), 0) - 1
+            if n <= 0:
+                self._pending_n.pop((mrep, mk), None)
+                self._pending.pop((mrep, mk), None)
+            else:
+                self._pending_n[(mrep, mk)] = n
+            self.grant_log.append((self._key_list[dk],
+                                   int(res["dlog_wts"][i][j]),
+                                   int(res["dlog_rts"][i][j]),
+                                   int(res["dlog_ver"][i][j])))
+
+    def _decode(self, op: Op, res, i):
+        kind = op.kind
+        if kind == "read":
+            if res["mm_used"][i]:
+                self.grant_log.append((op.key, int(res["wts"][i]),
+                                       int(res["rts"][i]),
+                                       int(res["version"][i])))
+            if not res["found"][i]:
+                return None
+            ver = int(res["version"][i])
+            if ver < 0:      # store-buffer forwarding of a posted write
+                return self._pending[(op.replica, self._keys[op.key])], None
+            return self._vals[int(res["gseq"][i])], ver
+        if kind == "write":
+            kid = self._keys[op.key]
+            self._pending[(op.replica, kid)] = op.value
+            self._pending_n[(op.replica, kid)] = self._pending_n.get(
+                (op.replica, kid), 0) + 1
+            node = op.replica // self._rpn
+            self._qmirror[node].append((kid, op.value, op.replica))
+            self._drains(res, i, node=node)
+            return None
+        if kind == "fence":
+            self._drains(res, i)
+            return int(res["gmax"][i])
+        if kind in ("mm_write", "publish"):
+            gs = int(res["gseq"][i])
+            self._vals[gs] = op.value
+            self._writes_since_prune += 1
+            g = (op.key, int(res["wts"][i]), int(res["rts"][i]),
+                 int(res["version"][i]))
+            self.grant_log.append(g)
+            if kind == "mm_write":
+                return g[1], g[2], g[3]
+            return g[1], g[2]
+        if kind == "mm_read":
+            if not res["found"][i]:
+                return None
+            g = (op.key, int(res["wts"][i]), int(res["rts"][i]),
+                 int(res["version"][i]))
+            self.grant_log.append(g)
+            return (self._vals[int(res["gseq"][i])], g[3], g[1], g[2])
+        raise ValueError(f"unknown op kind {kind!r}")
+
+    # ------------------------------------------------------------ batched
+    def peek(self, key, replica: int = 0) -> bool:
+        kid = self._keys.get(key)
+        if kid is None:
+            return False
+        s1 = self._meta[kid][0]
+        tags = np.asarray(self._af.rp.tag[replica, s1])[:-1]
+        w = np.nonzero(tags == kid)[0]
+        if w.size == 0:
+            return False
+        rts = int(np.asarray(self._af.rp.rts[replica, s1])[w[0]])
+        return bool(protocol.valid(int(np.asarray(self._af.rp.cts[replica])),
+                                   rts))
+
+    def read_batch(self, keys: Sequence, replica: int = 0):
+        """The two-phase batched read (backend contract), vectorized:
+        phase 1 serves every replica-tier lease hit with ONE
+        ``state.tier_probe`` call over the whole batch; phase 2 runs the
+        misses, in op order, through the exact op-scan."""
+        if not keys:
+            return []
+        B = len(keys)
+        keymap = self._keys
+        try:
+            kids = [keymap[k] for k in keys]     # hot path: interned keys
+        except KeyError:
+            kids = [self._kid(k) for k in keys]
+        kids_np = np.asarray(kids, np.int32)
+        if self._meta_dev is None:
+            # whole table at its (power-of-two) capacity: stable shapes
+            self._meta_dev = jnp.asarray(self._meta[:, 0])
+        packed, lru2, tick2, g2, r2 = self._fast_read(
+            self._af.rp, self._af.rp_gseq, self._af.rp_tick, self._af.g,
+            self._af.r, self._meta_dev, jnp.asarray(kids_np),
+            np.int32(replica))
+        self._af = self._af._replace(rp=self._af.rp._replace(lru=lru2),
+                                     rp_tick=tick2, g=g2, r=r2)
+        packed = np.asarray(packed)
+        hit = packed[0].astype(bool)
+        ver, gseq = packed[1], packed[2]
+        vals, pend = self._vals, self._pending
+        if hit.all():
+            self.fast_read_batches += 1
+            return [(vals[g], v) if v >= 0 else (pend[(replica, k)], None)
+                    for k, v, g in zip(kids, ver.tolist(), gseq.tolist())]
+        out: List = [None] * B
+        for i in np.nonzero(hit)[0]:
+            v = int(ver[i])
+            out[i] = ((pend[(replica, kids[i])], None) if v < 0
+                      else (vals[int(gseq[i])], v))
+        miss = np.nonzero(~hit)[0]
+        if miss.size:
+            res = self.apply([Op("read", keys[i], replica=replica)
+                              for i in miss])
+            for j, i in enumerate(miss):
+                out[i] = res[j][1]
+        return out
+
+    # ------------------------------------------------------------ scalar
+    def read(self, key, replica: int = 0):
+        return self.apply([Op("read", key, replica=replica)])[0][1]
+
+    def write(self, key, value, replica: int = 0, wr_lease=None) -> None:
+        self.apply([Op("write", key, value, replica=replica,
+                       wr_lease=wr_lease)])
+
+    def fence(self) -> int:
+        return self.apply([Op("fence")])[0][1]
+
+    def mm_write(self, key, value, wr_lease=None):
+        return self.apply([Op("mm_write", key, value,
+                              wr_lease=wr_lease)])[0][1]
+
+    def publish(self, key, value, node: int = 0, wr_lease=None):
+        return self.apply([Op("publish", key, value, node=node,
+                              wr_lease=wr_lease)])[0][1]
+
+    def mm_read(self, key):
+        return self.apply([Op("mm_read", key)])[0][1]
+
+    # ------------------------------------------------------------ views
+    def memts(self, key) -> int:
+        kid = self._keys.get(key)
+        if kid is None:
+            return 0
+        shard = self._meta[kid][2]
+        tags = np.asarray(self._af.tsu.tag[shard, 0])
+        hit = np.nonzero(tags == kid)[0]
+        if hit.size == 0:
+            return 0
+        return int(np.asarray(self._af.tsu.memts[shard, 0])[hit[0]])
+
+    def stats(self) -> Dict[str, int]:
+        g = np.asarray(jax.device_get(self._af.g))
+        out = {k: int(g[i]) for i, k in enumerate(_G_KEYS)}
+        out["wb_evictions"] = 0
+        out["inval_msgs"] = 0
+        return out
+
+    def replica_stats(self, replica: int = 0) -> Dict[str, int]:
+        r = np.asarray(jax.device_get(self._af.r))[replica]
+        out = {k: 0 for k in self.stats()}
+        out.update({k: int(r[i]) for i, k in enumerate(_R_KEYS)})
+        return out

@@ -1,0 +1,239 @@
+"""The backend-parity contract: one lease API, two engines.
+
+``FabricBackend`` is the single front door every consumer (serving KV
+adapter, training lease clock, runtime server/trainer, benchmarks) talks
+to.  Two implementations exist and MUST be bit-identical on any op trace
+(DESIGN.md §7; tests/test_fabric_parity.py):
+
+  * ``HostFabric``   (this file)  — the host-object fabric (``TSUShard``
+    dicts, ``_SetAssoc`` lists): slow, obvious, the differential-test
+    ORACLE.  One Python call per key.
+  * ``ArrayFabric``  (arrays.py)  — the array-native fabric: the whole
+    state as ``core.state`` pytrees on device, a batch of ops applied as
+    one jitted ``lax.scan``.  The production hot path.
+
+Op vocabulary (exactly the host objects' public surface):
+
+  read(key, replica)          ReplicaCache.get       -> (value, version)|None
+  write(key, value, replica)  ReplicaCache.put       posted write-through
+  fence()                     TSUFabric.barrier      drain + clock jump
+  mm_write(key, value)        TSUFabric.write        raw authority write
+  publish(key, value, node)   AuthoritativeStore.write = mm_write + adopt
+  mm_read(key)                TSUFabric.read         raw authority read
+
+Every backend also exposes ``grant_log`` — the ordered list of
+``(key, wts, rts, version)`` leases the MM+TSU authority actually granted —
+which is what the parity suite pins bit-for-bit.
+"""
+from __future__ import annotations
+
+import abc
+import collections
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+from repro.coherence.fabric.cache import ReplicaCache, SharedCache
+from repro.coherence.fabric.tsu import FabricConfig, TSUFabric
+
+# A bounded TSU is part of the contract: the array backend is a fixed
+# [n_shards, capacity] table, so the oracle must run with the same bound.
+DEFAULT_TSU_CAPACITY = 1024
+# grant_log bound, shared by BOTH backends so parity-compared logs
+# truncate identically (differential traces are far shorter than this)
+GRANT_LOG_LEN = 65536
+
+
+class Op(NamedTuple):
+    """One fabric operation, the unit of the differential trace."""
+
+    kind: str                       # read|write|fence|mm_write|publish|mm_read
+    key: Any = None
+    value: Any = None
+    replica: int = 0
+    node: int = 0                   # publish target tier
+    wr_lease: Optional[int] = None
+
+
+def _bounded(cfg: FabricConfig) -> FabricConfig:
+    if cfg.tsu_capacity is None:
+        cfg = dataclasses.replace(cfg, tsu_capacity=DEFAULT_TSU_CAPACITY)
+    return cfg
+
+
+class FabricBackend(abc.ABC):
+    """Common surface of the host-object and array-native fabrics."""
+
+    cfg: FabricConfig
+    n_nodes: int
+    n_replicas: int
+    grant_log: List[Tuple[Any, int, int, int]]
+
+    # ------------------------------------------------------------ scalar
+    @abc.abstractmethod
+    def read(self, key, replica: int = 0) -> Optional[Tuple[Any, Optional[int]]]:
+        ...
+
+    @abc.abstractmethod
+    def write(self, key, value, replica: int = 0,
+              wr_lease: Optional[int] = None) -> None:
+        ...
+
+    @abc.abstractmethod
+    def fence(self) -> int:
+        ...
+
+    @abc.abstractmethod
+    def mm_write(self, key, value,
+                 wr_lease: Optional[int] = None) -> Tuple[int, int, int]:
+        """Raw authority write -> (wts, rts, version)."""
+
+    @abc.abstractmethod
+    def publish(self, key, value, node: int = 0,
+                wr_lease: Optional[int] = None) -> Tuple[int, int]:
+        """Authority write + adopt into ``node``'s shared tier -> (wts, rts)."""
+
+    @abc.abstractmethod
+    def mm_read(self, key) -> Optional[Tuple[Any, int, int, int]]:
+        """Raw authority read -> (value, version, wts, rts) | None."""
+
+    @abc.abstractmethod
+    def memts(self, key) -> int:
+        ...
+
+    @abc.abstractmethod
+    def stats(self) -> Dict[str, int]:
+        ...
+
+    @abc.abstractmethod
+    def replica_stats(self, replica: int = 0) -> Dict[str, int]:
+        ...
+
+    @abc.abstractmethod
+    def peek(self, key, replica: int = 0) -> bool:
+        """Non-mutating: True iff a read would hit the replica tier."""
+
+    # ------------------------------------------------------------ batched
+    def read_batch(self, keys: Sequence, replica: int = 0) -> List:
+        """Batched read with TWO-PHASE semantics (the serving hot path):
+        replica-tier lease hits are served first, in op order, then the
+        misses run the full descend-and-fill transition, in op order.
+        Both backends implement exactly this order (the array backend
+        serves phase 1 as ONE vectorized probe), so batched reads stay
+        bit-identical across backends; ``apply`` keeps plain sequential
+        per-op semantics."""
+        hits = [self.peek(k, replica) for k in keys]
+        out: List = [None] * len(keys)
+        for i, k in enumerate(keys):
+            if hits[i]:
+                out[i] = self.read(k, replica)
+        for i, k in enumerate(keys):
+            if not hits[i]:
+                out[i] = self.read(k, replica)
+        return out
+
+    def write_batch(self, items: Sequence[Tuple[Any, Any]],
+                    replica: int = 0, wr_lease: Optional[int] = None) -> None:
+        self.apply([Op("write", k, v, replica=replica, wr_lease=wr_lease)
+                    for k, v in items])
+
+    def apply(self, ops: Sequence[Op]) -> List[Tuple[Op, Any]]:
+        """Run an op trace; returns [(op, result)] in order.  The base
+        implementation loops scalar calls; ``ArrayFabric`` overrides it
+        with one jitted scan per batch."""
+        out = []
+        for op in ops:
+            if op.kind == "read":
+                r = self.read(op.key, op.replica)
+            elif op.kind == "write":
+                r = self.write(op.key, op.value, op.replica, op.wr_lease)
+            elif op.kind == "fence":
+                r = self.fence()
+            elif op.kind == "mm_write":
+                r = self.mm_write(op.key, op.value, op.wr_lease)
+            elif op.kind == "publish":
+                r = self.publish(op.key, op.value, op.node, op.wr_lease)
+            elif op.kind == "mm_read":
+                r = self.mm_read(op.key)
+            else:
+                raise ValueError(f"unknown op kind {op.kind!r}")
+            out.append((op, r))
+        return out
+
+
+class HostFabric(FabricBackend):
+    """The host-object fabric behind the backend contract — the oracle.
+
+    Wraps one ``TSUFabric`` + ``n_nodes`` shared tiers + ``n_nodes *
+    replicas_per_node`` replica tiers (replica r lives on node
+    ``r // replicas_per_node``), and records every authority grant in
+    ``grant_log`` in execution order.
+    """
+
+    def __init__(self, cfg: FabricConfig = FabricConfig(),
+                 n_nodes: int = 1, replicas_per_node: int = 1):
+        self.cfg = _bounded(cfg)
+        self.n_nodes = n_nodes
+        self.n_replicas = n_nodes * replicas_per_node
+        self.fabric = TSUFabric(self.cfg)
+        self.nodes = [SharedCache(self.fabric, node_id=i)
+                      for i in range(n_nodes)]
+        self.replicas = [ReplicaCache(self.nodes[r // replicas_per_node])
+                         for r in range(self.n_replicas)]
+        self.grant_log = collections.deque(maxlen=GRANT_LOG_LEN)
+        self._tap_grants()
+
+    def _tap_grants(self) -> None:
+        fab, log = self.fabric, self.grant_log
+        orig_read, orig_write = fab.read, fab.write
+
+        def read(key, home_shard=None):
+            g = orig_read(key, home_shard=home_shard)
+            if g is not None:
+                log.append((key, g.wts, g.rts, g.version))
+            return g
+
+        def write(key, value, *, wr_lease=None, home_shard=None):
+            g = orig_write(key, value, wr_lease=wr_lease,
+                           home_shard=home_shard)
+            log.append((key, g.wts, g.rts, g.version))
+            return g
+
+        fab.read, fab.write = read, write
+
+    # ------------------------------------------------------------- ops
+    def peek(self, key, replica: int = 0) -> bool:
+        return self.replicas[replica].peek(key)
+
+    def read(self, key, replica: int = 0):
+        return self.replicas[replica].get(key)
+
+    def write(self, key, value, replica: int = 0, wr_lease=None) -> None:
+        self.replicas[replica].put(key, value, wr_lease=wr_lease)
+
+    def fence(self) -> int:
+        return self.fabric.barrier()
+
+    def mm_write(self, key, value, wr_lease=None):
+        g = self.fabric.write(key, value, wr_lease=wr_lease)
+        return g.wts, g.rts, g.version
+
+    def publish(self, key, value, node: int = 0, wr_lease=None):
+        g = self.fabric.write(key, value, wr_lease=wr_lease)
+        self.nodes[node].adopt(key, value, g)
+        return g.wts, g.rts
+
+    def mm_read(self, key):
+        g = self.fabric.read(key)
+        if g is None:
+            return None
+        return g.value, g.version, g.wts, g.rts
+
+    # ------------------------------------------------------------ views
+    def memts(self, key) -> int:
+        return self.fabric.memts(key)
+
+    def stats(self) -> Dict[str, int]:
+        return self.fabric.stats.to_dict()
+
+    def replica_stats(self, replica: int = 0) -> Dict[str, int]:
+        return self.replicas[replica].stats.to_dict()

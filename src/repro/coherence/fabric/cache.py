@@ -172,6 +172,15 @@ class ReplicaCache:
     def _stats(self) -> List[FabricStats]:
         return [self.shared.fabric.stats, self.stats]
 
+    def peek(self, key) -> bool:
+        """Non-mutating lease check: True iff ``get`` would be served from
+        this tier (tag match AND live lease).  No LRU touch, no counters —
+        the probe half of the batched read's phase split (backend.py)."""
+        for line in self._store._row(key):
+            if line is not None and line.key == key:
+                return bool(protocol.valid(self.cts, line.rts))
+        return False
+
     def get(self, key) -> Optional[Tuple[Any, int]]:
         stats = self._stats()
         _bump(stats, "reads")

@@ -1,28 +1,87 @@
 """Lease-coherent prefix-KV cache for multi-replica serving.
 
-The serving-side transfer of HALCONE (DESIGN.md §2b): prefill results (prefix
-KV blocks) are shared across serving replicas.  Since the coherence fabric
-landed, this module is a THIN ADAPTER: the sharded TSU service
-(`repro.coherence.fabric`) is the MM+TSU, and each replica's local cache is a
-fabric `ReplicaCache` over the node's `SharedCache`.  Replicas still
-*self-invalidate* on lease expiry instead of receiving invalidation messages
-when a prefix is recomputed/updated (e.g. after a model refresh or cache
-eviction upstream); all timestamp rules live in `repro.core.protocol`, called
-only by the fabric.
+The serving-side transfer of HALCONE (DESIGN.md §2a): prefill results
+(prefix KV blocks) are shared across serving replicas; replicas
+*self-invalidate* on lease expiry instead of receiving invalidation
+messages when a prefix is republished (model refresh, upstream eviction).
+
+Since the array-native refactor (DESIGN.md §7) the production adapter is
+``BatchedKVLease``: a thin veneer over a ``FabricBackend`` — by default the
+jitted ``ArrayFabric`` — whose ``get_batch``/``put_batch`` issue ONE
+batched lease probe per decode batch instead of a Python call per key.
+``runtime/server.py`` and ``launch/serve.py`` speak only this API.
+
+``AuthoritativeStore`` / ``LeaseKVCache`` remain as the HOST-OBJECT
+adapters over the oracle fabric — kept because the differential parity
+suite (tests/test_fabric_parity.py) pins the array backend to them
+bit-for-bit; they are not a production path.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.coherence.fabric import (FabricConfig, ReplicaCache, SharedCache,
+from repro.coherence.fabric import (ArrayFabric, FabricBackend,
+                                    FabricConfig, ReplicaCache, SharedCache,
                                     TSUFabric)
 
 
-class AuthoritativeStore:
-    """The MM+TSU front door: versioned prefix blocks + memts per key.
+class BatchedKVLease:
+    """A serving replica's batched lease front end (the production path).
 
-    Adapter over a `TSUFabric`; also owns the node-shared cache tier that
-    every `LeaseKVCache` replica attached to this store reads through.
+    One ``get_batch`` = one vectorized fabric probe for the whole decode
+    batch (backend two-phase semantics: lease hits served in one
+    ``state.tier_probe`` call, misses through the exact op-scan); one
+    ``put_batch`` = the posted write-throughs for every freshly prefilled
+    prefix.  All timestamp rules live behind the backend in
+    ``core.protocol`` / ``core.state``.
+    """
+
+    def __init__(self, backend: Optional[FabricBackend] = None,
+                 replica: int = 0):
+        self.backend = backend if backend is not None else ArrayFabric(
+            FabricConfig())
+        self.replica = replica
+
+    # ------------------------------------------------------------ batched
+    def get_batch(self, keys: Sequence[str]) -> List:
+        """[(value, version) | None] per key, one fabric round trip."""
+        return self.backend.read_batch(keys, replica=self.replica)
+
+    def put_batch(self, items: Sequence[Tuple[str, Any]]) -> None:
+        self.backend.write_batch(items, replica=self.replica)
+
+    # ------------------------------------------------------------- scalar
+    def get(self, key: str):
+        return self.backend.read(key, replica=self.replica)
+
+    def put(self, key: str, value: Any) -> None:
+        self.backend.write(key, value, replica=self.replica)
+
+    def fence(self) -> int:
+        return self.backend.fence()
+
+    # ------------------------------------------------------------- views
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counter names, derived from the replica's fabric view."""
+        s = self.backend.replica_stats(self.replica)
+        return {"hits": s["l1_hits"],
+                "coherence_misses": s["coh_miss_l1"],
+                "compulsory": s["compulsory"],
+                "refetches": s["refetches"],
+                "capacity_evictions": s["capacity_evictions"]}
+
+    @property
+    def fabric_stats(self) -> Dict[str, int]:
+        return self.backend.stats()
+
+
+class AuthoritativeStore:
+    """HOST-ORACLE adapter: the MM+TSU front door over the host fabric.
+
+    Adapter over a host ``TSUFabric``; also owns the node-shared cache tier
+    that every ``LeaseKVCache`` replica attached to this store reads
+    through.  Used by the oracle half of the parity suite.
     """
 
     def __init__(self, rd_lease: Optional[int] = None,
@@ -68,7 +127,7 @@ class AuthoritativeStore:
 
 
 class LeaseKVCache:
-    """A serving replica's local cache with a logical clock.
+    """HOST-ORACLE adapter: a replica's local cache with a logical clock.
 
     cts advances on every write-through this replica performs; reads hit
     while cts <= rts; expiry triggers a refetch from the node tier or the

@@ -40,17 +40,19 @@ class LeaseClock:
     """Lamport bookkeeping for the parameter store (host-level).
 
     Thin adapter over the coherence fabric: the parameter blob is one block
-    in the sharded TSU service, and every window's write-through is a fabric
-    ``mm_write`` — so training's clock shares the 16-bit overflow reinit and
-    the telemetry of the serving path instead of re-deriving the rules.
+    in the sharded TSU service, and every window's write-through is an
+    authority ``mm_write`` — so training's clock shares the 16-bit overflow
+    reinit and the telemetry of the serving path instead of re-deriving the
+    rules.  Takes any ``FabricBackend`` (default: the jitted array fabric);
+    the legacy host ``TSUFabric`` is still accepted for the oracle tests.
     """
 
     PARAM_KEY = "params"
 
     def __init__(self, fabric=None):
-        from repro.coherence.fabric import FabricConfig, TSUFabric
-        self.fabric = fabric or TSUFabric(FabricConfig(n_shards=1,
-                                                       max_in_flight=0))
+        from repro.coherence.fabric import ArrayFabric, FabricConfig
+        self.fabric = fabric if fabric is not None else ArrayFabric(
+            FabricConfig(n_shards=1, max_in_flight=0))
 
     @property
     def memts(self) -> int:
@@ -58,9 +60,14 @@ class LeaseClock:
 
     def on_sync(self, wr_lease: int, version_tag=None):
         from repro.core import protocol
+        from repro.coherence.fabric import FabricBackend
+        if isinstance(self.fabric, FabricBackend):
+            wts, rts, _ = self.fabric.mm_write(self.PARAM_KEY, version_tag,
+                                               wr_lease=wr_lease)
+            return protocol.Lease(wts, rts)  # the new param version
         grant = self.fabric.write(self.PARAM_KEY, version_tag,
                                   wr_lease=wr_lease)
-        return protocol.Lease(grant.wts, grant.rts)  # the new param version
+        return protocol.Lease(grant.wts, grant.rts)
 
 
 def make_lease_window_step(cfg, mesh, opt: adamw.AdamWConfig,

@@ -1,6 +1,6 @@
 """HALCONE core: the paper's timestamp-coherence protocol, a vectorized
 multi-GPU memory-hierarchy simulator, system configs, and trace generators."""
-from repro.core import protocol, traces  # noqa: F401
+from repro.core import protocol, state, traces  # noqa: F401
 from repro.core.engine import (COMPUTE, FENCE, NOP, READ, WRITE,  # noqa: F401
                                SimState, init_state, simulate, sweep)
 from repro.core.sysconfig import (ALL_CONFIGS, SystemConfig,  # noqa: F401

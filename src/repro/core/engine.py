@@ -3,12 +3,16 @@
 TPU-native re-formulation of the paper's event-driven MGPUSim model: the
 protocol advances in *rounds* (one instruction per CU per round) inside a
 ``lax.scan``; every L1/L2/TSU probe, fill and timestamp update is executed as
-a dense array operation batched over all 128+ CUs at once.  The L1 and L2
-probe+install math — the paper's per-request coherence action — is served by
+a dense array operation batched over all 128+ CUs at once.  Since the
+array-native refactor (DESIGN.md §7) the engine holds its hierarchy as
+``core.state`` pytrees (``TierState`` for L1/L2, ``TSUState`` for the TSU)
+and every transition — probe, victim choice, TSU grant, fused probe+install
+— is a call into ``core.state``; this file only contributes *timing* (a
+mean-value queueing model: fixed component latencies plus per-round
+occupancy delays at L2 banks / HBM stacks / PCIe links) and the per-config
+routing/gating policy.  The L1 and L2 probe+install math is served by
 ``kernels.lease_probe`` (compiled Pallas on TPU/GPU, interpret fallback on
-CPU, selected at runtime).  Timing is a mean-value queueing model: fixed
-component latencies plus per-round occupancy delays at L2 banks / HBM stacks
-/ PCIe links.
+CPU, selected at runtime) via ``state.tier_probe``.
 
 Two drivers (DESIGN.md §5):
 
@@ -40,33 +44,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocol
+from repro.core import protocol, state as S
+from repro.core.state import INVALID, TSUState, TierState
 from repro.core.sysconfig import SystemConfig, stack_configs, static_key
-from repro.kernels.lease_probe import lease_probe
 
 NOP, READ, WRITE, FENCE, COMPUTE = 0, 1, 2, 3, 4
-INVALID = jnp.int32(-1)
 
 
 class SimState(NamedTuple):
-    # L1: per CU
-    l1_tag: jnp.ndarray    # [NC, S1, W1+1] int32 (-1 invalid; last way=trash)
-    l1_rts: jnp.ndarray
-    l1_wts: jnp.ndarray
-    l1_ver: jnp.ndarray
-    l1_lru: jnp.ndarray
-    l1_cts: jnp.ndarray    # [NC]
-    # L2: per (gpu*banks)
-    l2_tag: jnp.ndarray    # [NL2, S2, W2+1]
-    l2_rts: jnp.ndarray
-    l2_wts: jnp.ndarray
-    l2_ver: jnp.ndarray
-    l2_lru: jnp.ndarray
-    l2_dirty: jnp.ndarray
-    l2_cts: jnp.ndarray    # [NL2]
-    # TSU: per HBM stack
-    tsu_tag: jnp.ndarray   # [NH, ST, TW+1]
-    tsu_memts: jnp.ndarray
+    l1: TierState          # per CU               [NC, S1, W1+1]
+    l2: TierState          # per (gpu*banks)      [NL2, S2, W2+1]
+    l2_dirty: jnp.ndarray  # WB policy bit        [NL2, S2, W2+1]
+    tsu: TSUState          # per HBM stack        [NH, ST, TW+1]
     # main memory (authoritative data versions)
     mm_ver: jnp.ndarray    # [A]
     # HMG directory
@@ -74,6 +63,22 @@ class SimState(NamedTuple):
     # timing / counters
     time: jnp.ndarray      # [NC] f32
     ctr: dict              # scalars f32
+
+    # -- flat-field views kept for litmus/demo inspection of results --
+    l1_tag = property(lambda s: s.l1.tag)
+    l1_rts = property(lambda s: s.l1.rts)
+    l1_wts = property(lambda s: s.l1.wts)
+    l1_ver = property(lambda s: s.l1.ver)
+    l1_lru = property(lambda s: s.l1.lru)
+    l1_cts = property(lambda s: s.l1.cts)
+    l2_tag = property(lambda s: s.l2.tag)
+    l2_rts = property(lambda s: s.l2.rts)
+    l2_wts = property(lambda s: s.l2.wts)
+    l2_ver = property(lambda s: s.l2.ver)
+    l2_lru = property(lambda s: s.l2.lru)
+    l2_cts = property(lambda s: s.l2.cts)
+    tsu_tag = property(lambda s: s.tsu.tag)
+    tsu_memts = property(lambda s: s.tsu.memts)
 
 
 COUNTERS = ("l1_to_l2", "l2_to_mm", "l1_hits", "l2_hits", "coh_miss_l1",
@@ -84,38 +89,18 @@ COUNTERS = ("l1_to_l2", "l2_to_mm", "l1_hits", "l2_hits", "coh_miss_l1",
 def init_state(cfg: SystemConfig, n_addr: int) -> SimState:
     NC = cfg.n_cus
     NL2 = cfg.n_gpus * cfg.l2_banks
-    shp1 = (NC, cfg.l1_sets, cfg.l1_ways + 1)
-    shp2 = (NL2, cfg.l2_sets, cfg.l2_ways + 1)
-    shpt = (cfg.n_hbm, cfg.tsu_sets, cfg.tsu_ways + 1)
     G = cfg.n_gpus if cfg.protocol == "hmg" else 1
     A = n_addr if cfg.protocol == "hmg" else 1
-    z = lambda s: jnp.zeros(s, jnp.int32)
     return SimState(
-        l1_tag=jnp.full(shp1, INVALID), l1_rts=z(shp1), l1_wts=z(shp1),
-        l1_ver=z(shp1), l1_lru=z(shp1), l1_cts=z((NC,)),
-        l2_tag=jnp.full(shp2, INVALID), l2_rts=z(shp2), l2_wts=z(shp2),
-        l2_ver=z(shp2), l2_lru=z(shp2), l2_dirty=jnp.zeros(shp2, bool),
-        l2_cts=z((NL2,)),
-        tsu_tag=jnp.full(shpt, INVALID), tsu_memts=z(shpt),
-        mm_ver=z((n_addr,)),
+        l1=S.init_tier(NC, cfg.l1_sets, cfg.l1_ways),
+        l2=S.init_tier(NL2, cfg.l2_sets, cfg.l2_ways),
+        l2_dirty=jnp.zeros((NL2, cfg.l2_sets, cfg.l2_ways + 1), bool),
+        tsu=S.init_tsu(cfg.n_hbm, cfg.tsu_sets, cfg.tsu_ways),
+        mm_ver=jnp.zeros((n_addr,), jnp.int32),
         dir_sharers=jnp.zeros((A, G), bool),
         time=jnp.zeros((NC,), jnp.float32),
         ctr={k: jnp.zeros((), jnp.float32) for k in COUNTERS},
     )
-
-
-def _probe(tag_arr, idx, set_idx, addr):
-    """tag_arr: [N, S, W+1]; returns (hit, way) over live ways."""
-    rows = tag_arr[idx, set_idx][:, :-1]          # [n, W]
-    eq = rows == addr[:, None]
-    return eq.any(-1), jnp.argmax(eq, -1)
-
-
-def _victim(tag_arr, lru_arr, idx, set_idx):
-    rows_t = tag_arr[idx, set_idx][:, :-1]
-    rows_l = lru_arr[idx, set_idx][:, :-1]
-    score = jnp.where(rows_t == INVALID, jnp.int32(-2**30), rows_l)
-    return jnp.argmin(score, -1)
 
 
 def _queue_delay(cache_idx, active, n_queues, service):
@@ -286,21 +271,12 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         # state updates are gated below.
         if coherent:
             ts_set = addr % cfg.tsu_sets
-            hitT, wayT = _probe(st.tsu_tag, hb, ts_set, addr)
-            vT = _victim(st.tsu_tag, st.tsu_memts, hb, ts_set)
+            hitT, wayT = S.probe(st.tsu.tag, hb, ts_set, addr)
+            vT = S.victim(st.tsu.tag, st.tsu.memts, hb, ts_set)
             wayT = jnp.where(hitT, wayT, vT)
-            memts = jnp.where(hitT, st.tsu_memts[hb, ts_set, wayT], 0)
-            r_lease, r_memts = protocol.mm_read(memts, cfg.rd_lease)
-            w_lease, w_memts = protocol.mm_write(memts, cfg.wr_lease)
-            mwts = jnp.where(is_write, w_lease.wts, r_lease.wts)
-            mrts = jnp.where(is_write, w_lease.rts, r_lease.rts)
-            new_memts = jnp.where(is_write, w_memts, r_memts)
-            # 16-bit overflow: re-initialize (WT makes this safe)
-            ovf = new_memts > protocol.TS_MAX
-            mwts = jnp.where(ovf, 0, mwts)
-            mrts = jnp.where(ovf, jnp.where(is_write, cfg.wr_lease,
-                                            cfg.rd_lease), mrts)
-            new_memts = jnp.where(ovf, mrts, new_memts)
+            memts = jnp.where(hitT, st.tsu.memts[hb, ts_set, wayT], 0)
+            grant = S.tsu_lease(memts, is_write, cfg.rd_lease, cfg.wr_lease)
+            mwts, mrts, new_memts = grant.wts, grant.rts, grant.new_memts
         else:
             # trivial grant: [0, inf) — install math then yields the
             # always-valid lease non-coherent blocks carry
@@ -312,16 +288,12 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         # not to reach L2 discard every derived value below: L2/L1 installs
         # are masked by l2_install/l1_install, both of which imply need_l2.
         (hit2_tag, hit2u, way2, rts2, l2_bwts, l2_brts, l2_ncts) = \
-            lease_probe(st.l2_tag[l2c, s2][:, :-1],
-                        st.l2_rts[l2c, s2][:, :-1],
-                        st.l2_cts[l2c], addr, mwts, mrts)
+            S.tier_probe(st.l2, l2c, s2, addr, mwts, mrts)
 
         # HMG second-level probe at the home node for local misses
         if hmg:
             (hitH_tag, _, wayH, _, _, _, _) = \
-                lease_probe(st.l2_tag[home_l2, s2][:, :-1],
-                            st.l2_rts[home_l2, s2][:, :-1],
-                            st.l2_cts[home_l2], addr, mwts, mrts)
+                S.tier_probe(st.l2, home_l2, s2, addr, mwts, mrts)
             home_hit_u = hitH_tag & ~hit2u & remote
         else:
             wayH = way2
@@ -335,26 +307,24 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         else:
             need_mm_u = is_write | (~hit2u & ~home_hit_u)
         wts_from_l2 = jnp.where(hit2u | home_hit_u,
-                                jnp.where(hit2u, st.l2_wts[l2c, s2, way2],
-                                          st.l2_wts[home_l2, s2, wayH]),
+                                jnp.where(hit2u, st.l2.wts[l2c, s2, way2],
+                                          st.l2.wts[home_l2, s2, wayH]),
                                 mwts)
         rts_from_l2 = jnp.where(hit2u | home_hit_u,
                                 jnp.where(hit2u, rts2,
-                                          st.l2_rts[home_l2, s2, wayH]),
+                                          st.l2.rts[home_l2, s2, wayH]),
                                 mrts)
         # lease hits keep their timestamps; misses and writes take the fresh
         # install (writes refresh the lease even on a hit)
         l2_new_wts = jnp.where(hit2u & ~is_write,
-                               st.l2_wts[l2c, s2, way2], l2_bwts)
+                               st.l2.wts[l2c, s2, way2], l2_bwts)
         l2_new_rts = jnp.where(hit2u & ~is_write, rts2, l2_brts)
         resp_wts = jnp.where(need_mm_u | is_write, l2_new_wts, wts_from_l2)
         resp_rts = jnp.where(need_mm_u | is_write, l2_new_rts, rts_from_l2)
 
         # ---------------- L1 probe + install math (Pallas hot path) -------
         (hit1_tag, hit1u, way1, _, l1_new_wts, l1_new_rts, l1_ncts) = \
-            lease_probe(st.l1_tag[cu_ids, s1][:, :-1],
-                        st.l1_rts[cu_ids, s1][:, :-1],
-                        st.l1_cts, addr, resp_wts, resp_rts)
+            S.tier_probe(st.l1, cu_ids, s1, addr, resp_wts, resp_rts)
         l1_lease = protocol.Lease(l1_new_wts, l1_new_rts)
         l1_hit = hit1u & mem
         coh1 = hit1_tag & mem & (~l1_hit)
@@ -371,21 +341,10 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
 
         # ---------------- TSU state updates -------------------------------
         if coherent:
-            tsu_active = need_mm
-            tw = jnp.where(tsu_active, wayT, cfg.tsu_ways)
-            new_tag = st.tsu_tag.at[hb, ts_set, tw].max(
-                jnp.where(tsu_active, addr, INVALID))
-            # scatter-max memts so same-round same-addr requests keep the
-            # largest extension (logical ties share a tick; §3.2)
-            cleared = jnp.where(tsu_active & ~hitT, 0,
-                                st.tsu_memts[hb, ts_set, tw])
-            tsu_memts = st.tsu_memts.at[hb, ts_set, tw].set(
-                jnp.where(tsu_active, jnp.maximum(cleared, 0), cleared))
-            tsu_memts = tsu_memts.at[hb, ts_set, tw].max(
-                jnp.where(tsu_active, new_memts, 0))
-            tsu_tag = new_tag
+            tsu = S.tsu_commit_scatter(st.tsu, hb, ts_set, wayT, addr,
+                                       new_memts, need_mm, hitT)
         else:
-            tsu_tag, tsu_memts = st.tsu_tag, st.tsu_memts
+            tsu = st.tsu
 
         # MM data versions: writes increment (scatter-add); then everyone
         # who reads MM sees the post-round version (same-tick semantics).
@@ -395,9 +354,9 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         mm_val = mm_ver[addr]
 
         # ---------------- response values ----------------
-        l1_val = st.l1_ver[cu_ids, s1, way1]
-        l2_val = st.l2_ver[l2c, s2, way2]
-        home_val = st.l2_ver[home_l2, s2, wayH]
+        l1_val = st.l1.ver[cu_ids, s1, way1]
+        l2_val = st.l2.ver[l2c, s2, way2]
+        home_val = st.l2.ver[home_l2, s2, wayH]
         read_val = jnp.where(l1_hit, l1_val,
                              jnp.where(l2_hit, l2_val,
                                        jnp.where(home_hit, home_val, mm_val)))
@@ -408,18 +367,18 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
 
         # ---------------- install into L2 ----------------
         l2_install = need_l2 & (~l2_hit | is_write)
-        v2 = _victim(st.l2_tag, st.l2_lru, l2c, s2)
+        v2 = S.victim(st.l2.tag, st.l2.lru, l2c, s2)
         w2i = jnp.where(l2_hit, way2, v2)
         dirty_evict = (st.l2_dirty[l2c, s2, w2i] &
-                       (st.l2_tag[l2c, s2, w2i] != INVALID) & ~l2_hit &
+                       (st.l2.tag[l2c, s2, w2i] != INVALID) & ~l2_hit &
                        l2_install) if wb else jnp.zeros_like(l2_install)
         w2s = jnp.where(l2_install, w2i, cfg.l2_ways)       # trash slot
-        l2_tag = st.l2_tag.at[l2c, s2, w2s].set(
+        l2_tag = st.l2.tag.at[l2c, s2, w2s].set(
             jnp.where(l2_install, addr, INVALID))
-        l2_ver = st.l2_ver.at[l2c, s2, w2s].set(fill_val)
-        l2_rts = st.l2_rts.at[l2c, s2, w2s].set(l2_new_rts)
-        l2_wts = st.l2_wts.at[l2c, s2, w2s].set(l2_new_wts)
-        l2_lru_new = st.l2_lru.at[l2c, s2,
+        l2_ver = st.l2.ver.at[l2c, s2, w2s].set(fill_val)
+        l2_rts = st.l2.rts.at[l2c, s2, w2s].set(l2_new_rts)
+        l2_wts = st.l2.wts.at[l2c, s2, w2s].set(l2_new_wts)
+        l2_lru_new = st.l2.lru.at[l2c, s2,
                                   jnp.where(need_l2, w2i, cfg.l2_ways)].set(rnd)
         l2_dirty = st.l2_dirty
         if wb:
@@ -430,9 +389,9 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         if coherent:
             # max with 0 is a no-op for non-writers; the kernel's new_cts IS
             # cts_after_write(l2_cts, l2_bwts) for the write's fresh lease
-            l2_cts = st.l2_cts.at[l2c].max(jnp.where(is_write, l2_ncts, 0))
+            l2_cts = st.l2.cts.at[l2c].max(jnp.where(is_write, l2_ncts, 0))
         else:
-            l2_cts = st.l2_cts
+            l2_cts = st.l2.cts
 
         # HMG: writer invalidates every sharer copy (VI), pays PCIe msgs
         inval_msgs = jnp.zeros((), jnp.float32)
@@ -463,21 +422,21 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
 
         # ---------------- install into L1 ----------------
         l1_install = mem & (~l1_hit | is_write)
-        v1 = _victim(st.l1_tag, st.l1_lru, cu_ids, s1)
+        v1 = S.victim(st.l1.tag, st.l1.lru, cu_ids, s1)
         w1i = jnp.where(hit1_tag, way1, v1)
         w1s = jnp.where(l1_install, w1i, cfg.l1_ways)
-        l1_tag = st.l1_tag.at[cu_ids, s1, w1s].set(
+        l1_tag = st.l1.tag.at[cu_ids, s1, w1s].set(
             jnp.where(l1_install, addr, INVALID))
-        l1_ver = st.l1_ver.at[cu_ids, s1, w1s].set(fill_val)
-        l1_rts = st.l1_rts.at[cu_ids, s1, w1s].set(l1_lease.rts)
-        l1_wts = st.l1_wts.at[cu_ids, s1, w1s].set(l1_lease.wts)
-        l1_lru = st.l1_lru.at[cu_ids, s1,
+        l1_ver = st.l1.ver.at[cu_ids, s1, w1s].set(fill_val)
+        l1_rts = st.l1.rts.at[cu_ids, s1, w1s].set(l1_lease.rts)
+        l1_wts = st.l1.wts.at[cu_ids, s1, w1s].set(l1_lease.wts)
+        l1_lru = st.l1.lru.at[cu_ids, s1,
                               jnp.where(mem, w1i, cfg.l1_ways)].set(rnd)
         if coherent:
             # the kernel's new_cts IS cts_after_write(l1_cts, l1_lease.wts)
-            l1_cts = jnp.where(is_write, l1_ncts, st.l1_cts)
+            l1_cts = jnp.where(is_write, l1_ncts, st.l1.cts)
         else:
-            l1_cts = st.l1_cts
+            l1_cts = st.l1.cts
 
         # fences: kernel boundary -> clocks jump to the global max
         if coherent:
@@ -531,11 +490,11 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         ctr["pcie_blocks"] += f(pcie_hop) if rdma else 0.0
 
         new_st = SimState(
-            l1_tag=l1_tag, l1_rts=l1_rts, l1_wts=l1_wts, l1_ver=l1_ver,
-            l1_lru=l1_lru, l1_cts=l1_cts,
-            l2_tag=l2_tag, l2_rts=l2_rts, l2_wts=l2_wts, l2_ver=l2_ver,
-            l2_lru=l2_lru_new, l2_dirty=l2_dirty, l2_cts=l2_cts,
-            tsu_tag=tsu_tag, tsu_memts=tsu_memts, mm_ver=mm_ver,
+            l1=TierState(tag=l1_tag, wts=l1_wts, rts=l1_rts, ver=l1_ver,
+                         lru=l1_lru, cts=l1_cts),
+            l2=TierState(tag=l2_tag, wts=l2_wts, rts=l2_rts, ver=l2_ver,
+                         lru=l2_lru_new, cts=l2_cts),
+            l2_dirty=l2_dirty, tsu=tsu, mm_ver=mm_ver,
             dir_sharers=dir_sharers, time=time, ctr=ctr)
         return new_st, (read_log if with_log else None)
 

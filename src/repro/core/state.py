@@ -1,0 +1,211 @@
+"""Array-native coherence state layer: the ONE implementation of the
+hierarchy transition rules.
+
+HALCONE's pitch is that every coherence decision is local arithmetic over
+``[wts, rts]`` leases — so the whole hierarchy (L1/replica tier, L2/shared
+tier, TSU) is representable as a handful of int32 arrays plus pure, batched
+transition functions.  This module holds exactly that:
+
+  * ``TierState``  — one set-associative lease tier ([N, S, W+1] arrays with
+    a trailing trash way for masked scatters) — the simulator's L1 and L2
+    AND the fabric's replica/shared client tiers.
+  * ``TSUState``   — the timestamp-storage-unit rows (tag + 16-bit memts) —
+    the simulator's per-HBM-stack TSU AND the fabric's per-shard MM+TSU
+    table (shaped ``[n_shards, 1, capacity+1]``, i.e. one fully-associative
+    set per shard).
+  * transition functions — probe / victim selection / the TSU grant
+    (Algorithm 3 + 16-bit overflow reinit) / the fused tier probe+install
+    (Algorithms 1, 2, 4, 5 via ``kernels.lease_probe``) / the TSU commit.
+
+Both consumers import from here and re-derive NOTHING:
+
+  * ``core/engine.py`` — the timing simulator: one ``round_step`` scan,
+    requests batched over all CUs.
+  * ``coherence/fabric/arrays.py`` — the production fabric: one op-scan,
+    requests batched per serving/training batch.
+
+All timestamp arithmetic is ``repro.core.protocol``; all fused probe+install
+math is ``kernels.lease_probe`` (compiled Pallas on TPU/GPU, interpret
+fallback on CPU — bit-identical, see DESIGN.md §5).  No other module may
+implement these rules (DESIGN.md §7 backend-parity contract).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.kernels.lease_probe import lease_probe
+
+INVALID = jnp.int32(-1)
+
+
+# ----------------------------------------------------------------- states
+class TierState(NamedTuple):
+    """One set-associative lease tier.
+
+    Arrays are ``[N, S, W+1]`` (N caches x S sets x W ways + 1 trash way
+    used as the target of masked scatters; a real tag never lands there).
+    ``cts`` is the per-cache logical clock ``[N]``.
+    """
+
+    tag: jnp.ndarray     # int32, INVALID = empty
+    wts: jnp.ndarray
+    rts: jnp.ndarray
+    ver: jnp.ndarray     # data version carried by the line
+    lru: jnp.ndarray     # victim score (higher = more recently used)
+    cts: jnp.ndarray     # [N] logical clocks
+
+    @property
+    def n_ways(self) -> int:
+        return self.tag.shape[-1] - 1
+
+
+class TSUState(NamedTuple):
+    """Timestamp-storage-unit rows: ``[H, S, W+1]`` tag + memts."""
+
+    tag: jnp.ndarray
+    memts: jnp.ndarray
+
+    @property
+    def n_ways(self) -> int:
+        return self.tag.shape[-1] - 1
+
+
+def init_tier(n: int, sets: int, ways: int) -> TierState:
+    shp = (n, sets, ways + 1)
+    z = lambda: jnp.zeros(shp, jnp.int32)
+    return TierState(tag=jnp.full(shp, INVALID), wts=z(), rts=z(), ver=z(),
+                     lru=z(), cts=jnp.zeros((n,), jnp.int32))
+
+
+def init_tsu(h: int, sets: int, ways: int) -> TSUState:
+    shp = (h, sets, ways + 1)
+    return TSUState(tag=jnp.full(shp, INVALID),
+                    memts=jnp.zeros(shp, jnp.int32))
+
+
+# ----------------------------------------------------------------- probes
+def probe(tag_arr, idx, set_idx, addr):
+    """Tag-only probe over the live ways of each request's set.
+
+    tag_arr: [N, S, W+1]; idx/set_idx/addr: [n].  Returns (tag_hit, way) —
+    ``way`` is the FIRST matching way (argmax over the match mask), the
+    convention every consumer and the Pallas kernel share.
+    """
+    rows = tag_arr[idx, set_idx][..., :-1]          # [n, W]
+    eq = rows == addr[..., None]
+    return eq.any(-1), jnp.argmax(eq, -1)
+
+
+def victim(tag_arr, score_arr, idx, set_idx):
+    """Victim way: invalid ways first, else the minimum score; ties break to
+    the FIRST such way (argmin), matching the host stores' strict-< scan."""
+    rows_t = tag_arr[idx, set_idx][..., :-1]
+    rows_s = score_arr[idx, set_idx][..., :-1]
+    score = jnp.where(rows_t == INVALID, jnp.int32(-2 ** 30), rows_s)
+    return jnp.argmin(score, -1)
+
+
+def victim_lex(tag_arr, primary, secondary, idx, set_idx):
+    """Lexicographic victim: invalid first, else min primary, ties broken by
+    min secondary (the fabric TSU's dict-order rule: among equal-``memts``
+    entries the earliest-allocated is evicted)."""
+    rows_t = tag_arr[idx, set_idx][..., :-1]
+    rows_p = primary[idx, set_idx][..., :-1]
+    rows_s = secondary[idx, set_idx][..., :-1]
+    invalid = rows_t == INVALID
+    p = jnp.where(invalid, jnp.int32(-2 ** 30), rows_p)
+    pmin = jnp.min(p, -1, keepdims=True)
+    s = jnp.where(p == pmin, rows_s, jnp.int32(2 ** 30))
+    return jnp.argmin(s, -1)
+
+
+# ------------------------------------------------------------- TSU grant
+class TSUGrant(NamedTuple):
+    wts: jnp.ndarray        # the [wts, rts] lease the TSU grants
+    rts: jnp.ndarray
+    new_memts: jnp.ndarray  # the clock the entry holds afterwards
+    overflow: jnp.ndarray   # bool: the 16-bit reinit fired
+
+
+def tsu_lease(memts, is_write, rd_lease, wr_lease) -> TSUGrant:
+    """The TSU decision (Algorithm 3, Fig. 5 conventions) for a batch of
+    requests against their entries' current clocks, including the 16-bit
+    overflow reinit (DESIGN.md §3a): a grant that would push ``memts`` past
+    ``protocol.TS_MAX`` restarts the entry at 0 and is re-served as a first
+    read — wts=0, rts=lease, memts'=rts (write-through keeps MM correct).
+
+    memts: [n] current entry clocks (0 for fresh/missing entries);
+    is_write: [n] bool; rd_lease/wr_lease: scalars or [n].
+    """
+    r_lease, r_memts = protocol.mm_read(memts, rd_lease)
+    w_lease, w_memts = protocol.mm_write(memts, wr_lease)
+    wts = jnp.where(is_write, w_lease.wts, r_lease.wts)
+    rts = jnp.where(is_write, w_lease.rts, r_lease.rts)
+    new_memts = jnp.where(is_write, w_memts, r_memts)
+    ovf = new_memts > protocol.TS_MAX
+    wts = jnp.where(ovf, 0, wts)
+    rts = jnp.where(ovf, jnp.where(is_write, wr_lease, rd_lease), rts)
+    new_memts = jnp.where(ovf, rts, new_memts)
+    return TSUGrant(wts, rts, new_memts, ovf)
+
+
+def tsu_commit_scatter(tsu: TSUState, idx, set_idx, way, addr, new_memts,
+                       active, tag_hit) -> TSUState:
+    """The simulator's TSU state update: same-round requests to one slot are
+    resolved by scatter-max (same-tick semantics, paper §3.2 — the largest
+    extension wins; on an eviction-install the largest tag keeps the slot).
+    Inactive requests are routed to the trash way.
+    """
+    tw = jnp.where(active, way, tsu.n_ways)
+    tag = tsu.tag.at[idx, set_idx, tw].max(
+        jnp.where(active, addr, INVALID))
+    cleared = jnp.where(active & ~tag_hit, 0, tsu.memts[idx, set_idx, tw])
+    memts = tsu.memts.at[idx, set_idx, tw].set(
+        jnp.where(active, jnp.maximum(cleared, 0), cleared))
+    memts = memts.at[idx, set_idx, tw].max(jnp.where(active, new_memts, 0))
+    return TSUState(tag=tag, memts=memts)
+
+
+def tsu_commit_exact(tsu: TSUState, idx, set_idx, way, addr, new_memts,
+                     active) -> TSUState:
+    """The fabric's TSU state update: one op at a time, so the slot is
+    written exactly (the host dict's replace semantics — no scatter-max
+    races to resolve).  Inactive ops are routed to the trash way."""
+    tw = jnp.where(active, way, tsu.n_ways)
+    return TSUState(
+        tag=tsu.tag.at[idx, set_idx, tw].set(
+            jnp.where(active, addr, tsu.tag[idx, set_idx, tw])),
+        memts=tsu.memts.at[idx, set_idx, tw].set(
+            jnp.where(active, new_memts, tsu.memts[idx, set_idx, tw])))
+
+
+# -------------------------------------------------- tier probe + install
+def install_lease(cts, wts_resp, rts_resp):
+    """Install math alone (Algorithms 1/2 + writer clock), for fills whose
+    way is already known: returns (new_wts, new_rts, new_cts).  The same
+    arithmetic ``tier_probe`` fuses with the probe via the Pallas kernel."""
+    lease = protocol.install(cts, wts_resp, rts_resp)
+    return lease.wts, lease.rts, protocol.cts_after_write(cts, lease.wts)
+
+
+def tier_probe(tier: TierState, idx, set_idx, addr, mwts, mrts):
+    """Fused probe + install math for one tier — the per-request coherence
+    action, served by the Pallas lease-probe kernel.
+
+    Gathers each request's set row from ``tier`` and runs the kernel:
+    tag compare (first-match way), lease validity (``protocol.valid``),
+    Algorithm 1/2 install (``protocol.install``) of the response lease
+    ``(mwts, mrts)`` arriving from the level below, and the writer clock
+    advance (``protocol.cts_after_write``).
+
+    Returns (tag_hit, hit, way, row_rts, new_wts, new_rts, new_cts); see
+    ``kernels.lease_probe`` for the exact contract.  Callers that only need
+    the probe half may pass zeros for (mwts, mrts) and ignore the install
+    outputs; callers that only need the install half ignore the hit outputs.
+    """
+    return lease_probe(tier.tag[idx, set_idx][..., :-1],
+                       tier.rts[idx, set_idx][..., :-1],
+                       tier.cts[idx], addr, mwts, mrts)

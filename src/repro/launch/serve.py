@@ -2,8 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --requests 8
 
-The server obtains every prefix-KV lease from the sharded TSU fabric
-(--tsu-shards), the same service the trainer and benchmarks use.
+The server obtains every prefix-KV lease from the array-native coherence
+fabric (``ArrayFabric``, --tsu-shards shards) via ONE batched probe per
+serve call — the same backend (and the same `core.state` transition rules)
+the trainer and benchmarks use.
 """
 import argparse
 import json
@@ -12,7 +14,7 @@ import jax
 import numpy as np
 
 from repro import configs as cfgs
-from repro.coherence.fabric import FabricConfig, TSUFabric
+from repro.coherence.fabric import ArrayFabric, FabricConfig
 from repro.models import init_model
 from repro.runtime.server import Request, Server
 
@@ -31,9 +33,9 @@ def main():
 
     cfg = cfgs.SMOKE[args.arch]            # serving demo runs the smoke cfg
     params = init_model(cfg, jax.random.PRNGKey(0))
-    fabric = TSUFabric(FabricConfig(n_shards=args.tsu_shards,
-                                    rd_lease=args.rd_lease,
-                                    wr_lease=args.wr_lease))
+    fabric = ArrayFabric(FabricConfig(n_shards=args.tsu_shards,
+                                      rd_lease=args.rd_lease,
+                                      wr_lease=args.wr_lease))
     srv = Server(cfg, params, batch_size=args.batch,
                  max_len=args.prompt_len + args.max_new + 8, fabric=fabric)
     rng = np.random.default_rng(0)
@@ -44,7 +46,10 @@ def main():
         prompt = np.random.default_rng(seed).integers(
             2, cfg.vocab, args.prompt_len).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new=args.max_new))
-    out = srv.serve(reqs)
+    # two waves: wave 1 prefills under one batched probe + one batched
+    # write-through; wave 2's identical prefixes ride the live leases
+    out = srv.serve(reqs[:len(reqs) // 2])
+    out.update(srv.serve(reqs[len(reqs) // 2:]))
     for rid in sorted(out):
         print(f"req {rid}: {list(out[rid])}")
     print("lease-cache stats:", srv.cache_stats)

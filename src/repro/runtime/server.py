@@ -1,24 +1,28 @@
-"""Batched serving runtime with the lease-coherent prefix cache.
+"""Batched serving runtime on the array-native coherence fabric.
 
 Requests are grouped into fixed-size decode batches; shared prompt prefixes
-hit the LeaseKVCache (HALCONE semantics: reuse without revalidation while the
-lease is live).  All leases come from the coherence fabric — pass a shared
-``TSUFabric`` to run many Server replicas against one sharded TSU service.
-Single-process reference implementation of the multi-replica serving
-pattern; launch/serve.py drives it on the production mesh.
+live in the lease-coherent prefix cache (HALCONE semantics: reuse without
+revalidation while the lease is live).  Since the array-native refactor
+(DESIGN.md §7) the server issues ONE batched lease probe per serve call —
+all groups' prefix keys go through ``BatchedKVLease.get_batch`` (a single
+vectorized ``state.tier_probe`` on the steady state), the missing prefixes
+are prefilled once, and ONE ``put_batch`` posts their write-throughs.
+There is no per-key host-object path left: every lease comes from a
+``FabricBackend`` (default ``ArrayFabric``) — pass a shared backend to run
+many Server replicas against one sharded TSU service.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.coherence.fabric import TSUFabric
-from repro.coherence.kv_lease import AuthoritativeStore, LeaseKVCache
+from repro.coherence.fabric import ArrayFabric, FabricBackend, FabricConfig
+from repro.coherence.kv_lease import BatchedKVLease
 from repro.models import decode_step, init_cache, prefill
 from repro.sharding import NOSHARD
 
@@ -36,40 +40,53 @@ def _prefix_key(tokens: np.ndarray) -> str:
 
 class Server:
     def __init__(self, cfg, params, *, batch_size: int = 4,
-                 max_len: int = 128, store: Optional[AuthoritativeStore] = None,
-                 fabric: Optional[TSUFabric] = None, node_id: int = 0):
+                 max_len: int = 128,
+                 fabric: Optional[FabricBackend] = None, replica: int = 0):
         self.cfg, self.params = cfg, params
         self.B, self.max_len = batch_size, max_len
-        store = store or AuthoritativeStore(fabric=fabric, node_id=node_id)
-        self.fabric = store.fabric
-        self.kv = LeaseKVCache(store)
+        self.fabric = fabric if fabric is not None else ArrayFabric(
+            FabricConfig())
+        self.kv = BatchedKVLease(self.fabric, replica=replica)
         self._prefill = jax.jit(
             lambda p, c, t: prefill(cfg, p, t, c, ctx=NOSHARD))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx=NOSHARD))
 
-    def _prefill_batch(self, prompts: np.ndarray):
-        """Prefix-cached prefill: identical prompt batches reuse cached KV."""
-        key = _prefix_key(prompts)
-        hit = self.kv.get(key)
-        if hit is not None:
-            cache, first = hit[0]
-            return cache, first
-        cache = init_cache(self.cfg, prompts.shape[0], self.max_len)
-        first, cache = self._prefill(self.params, cache,
-                                     jnp.asarray(prompts))
-        self.kv.put(key, (cache, first))
-        return cache, first
+    def _prefill_misses(self, keys: List[str], prompts_by_key: Dict[str, np.ndarray],
+                        leases: List) -> Dict[str, tuple]:
+        """Prefill every missed prefix once; post ONE batched write-through."""
+        filled: Dict[str, tuple] = {}
+        for key, hit in zip(keys, leases):
+            if hit is None and key not in filled:
+                prompts = prompts_by_key[key]
+                cache = init_cache(self.cfg, prompts.shape[0], self.max_len)
+                first, cache = self._prefill(self.params, cache,
+                                             jnp.asarray(prompts))
+                filled[key] = (cache, first)
+        if filled:
+            self.kv.put_batch(list(filled.items()))
+        return filled
 
     def serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
-        out: Dict[int, np.ndarray] = {}
+        # group into decode batches, pad the last one
+        groups: List[List[Request]] = []
         for i in range(0, len(requests), self.B):
             group = requests[i:i + self.B]
-            while len(group) < self.B:                 # pad the last batch
+            while len(group) < self.B:
                 group.append(Request(rid=-1, prompt=group[0].prompt))
-            prompts = np.stack([g.prompt for g in group])
-            S = prompts.shape[1]
-            cache, nxt = self._prefill_batch(prompts)
+            groups.append(group)
+        prompts = [np.stack([g.prompt for g in group]) for group in groups]
+        keys = [_prefix_key(p) for p in prompts]
+        # ONE batched lease probe over the call's unique prefixes
+        uniq = list(dict.fromkeys(keys))
+        leases_u = dict(zip(uniq, self.kv.get_batch(uniq)))
+        leases = [leases_u[k] for k in keys]
+        filled = self._prefill_misses(keys, dict(zip(keys, prompts)), leases)
+
+        out: Dict[int, np.ndarray] = {}
+        for group, pr, key, hit in zip(groups, prompts, keys, leases):
+            cache, nxt = hit[0] if hit is not None else filled[key]
+            S = pr.shape[1]
             toks = [np.asarray(nxt)]
             max_new = max(g.max_new for g in group)
             for t in range(max_new - 1):
@@ -89,4 +106,4 @@ class Server:
     @property
     def fabric_stats(self):
         """Fabric-wide telemetry (engine.COUNTERS names + service extras)."""
-        return self.fabric.stats.to_dict()
+        return self.fabric.stats()

@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.coherence.fabric import FabricConfig, TSUFabric
+from repro.coherence.fabric import ArrayFabric, FabricBackend, FabricConfig
 from repro.coherence.lease_sync import LeaseClock
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.steps import make_train_step
@@ -43,16 +43,16 @@ class Trainer:
     def __init__(self, cfg, mesh, opt: Optional[adamw.AdamWConfig] = None,
                  tcfg: TrainerConfig = TrainerConfig(),
                  data: Optional[SyntheticLM] = None,
-                 fabric: Optional[TSUFabric] = None):
+                 fabric: Optional[FabricBackend] = None):
         self.cfg, self.mesh, self.tcfg = cfg, mesh, tcfg
         self.opt = opt or adamw.AdamWConfig(total_steps=tcfg.total_steps)
         self.data = data
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         # every checkpoint publish is a parameter write-through on the
-        # coherence fabric: eval readers hold the previous version on a
-        # ckpt_period-step lease instead of being invalidated.
-        self.fabric = fabric or TSUFabric(FabricConfig(n_shards=1,
-                                                       max_in_flight=0))
+        # coherence fabric (array backend): eval readers hold the previous
+        # version on a ckpt_period-step lease instead of being invalidated.
+        self.fabric = fabric if fabric is not None else ArrayFabric(
+            FabricConfig(n_shards=1, max_in_flight=0))
         self.param_clock = LeaseClock(fabric=self.fabric)
         self.events: List[Dict] = []
         self._ema = None
@@ -102,7 +102,7 @@ class Trainer:
         self.ckpt.wait()
         return {"state": state, "losses": losses, "events": self.events,
                 "final_step": step,
-                "fabric_stats": self.fabric.stats.to_dict()}
+                "fabric_stats": self.fabric.stats()}
 
     def resume(self, mesh=None, template: Optional[adamw.TrainState] = None,
                **kw) -> Dict[str, Any]:

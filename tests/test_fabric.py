@@ -233,18 +233,27 @@ def test_lease_clock_adapter_memts_and_lease():
 
 
 def test_server_and_trainer_share_fabric_surface():
-    """Both runtimes expose the same FabricStats counter names."""
+    """Both runtimes expose the same FabricStats counter names, now via the
+    array backend; the server issues batched lease probes."""
     import jax
     import numpy as np
+    from repro.coherence.fabric import ArrayFabric
     from repro import configs as cfgs
     from repro.models import init_model
     from repro.runtime.server import Request, Server
 
     cfg = cfgs.SMOKE["smollm-360m"]
     params = init_model(cfg, jax.random.PRNGKey(0))
-    fabric = TSUFabric(FabricConfig(n_shards=2))
+    fabric = ArrayFabric(FabricConfig(n_shards=2))
     srv = Server(cfg, params, batch_size=2, max_len=32, fabric=fabric)
     prompt = np.arange(2, 10).astype(np.int32)
     srv.serve([Request(rid=0, prompt=prompt, max_new=2)])
+    srv.kv.fence()                       # drain the posted write-through
     assert srv.fabric_stats["write_throughs"] >= 1
     assert set(engine.COUNTERS) <= set(srv.fabric_stats)
+    # repeated serve is a lease hit — no new prefill write-through
+    wt = srv.fabric_stats["write_throughs"]
+    srv.serve([Request(rid=1, prompt=prompt, max_new=2)])
+    srv.kv.fence()
+    assert srv.fabric_stats["write_throughs"] == wt
+    assert srv.cache_stats["hits"] >= 1

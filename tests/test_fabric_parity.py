@@ -1,0 +1,182 @@
+"""Backend-parity suite: the array-native fabric is BIT-IDENTICAL to the
+host-object fabric (DESIGN.md §7).
+
+Randomized op traces (reads/writes/fences/authority ops across replicas,
+including forced 16-bit overflow reinits and TSU victim evictions) are
+applied to both ``FabricBackend`` implementations; every observable must
+match exactly: per-op results (values + versions), the ordered MM grant
+log (wts/rts/version), the full FabricStats block, each replica's mirror
+counters, and the per-key ``memts`` clocks.  A hypothesis layer fuzzes the
+same property when hypothesis is installed (CI does; the ``[test]``
+extra pulls it in).
+"""
+import numpy as np
+import pytest
+
+from repro.coherence.fabric import (ArrayFabric, FabricConfig, HostFabric,
+                                    Op)
+from repro.core import protocol
+
+# one small geometry reused everywhere so the jitted op-scan compiles once
+SMALL = dict(n_shards=2, rd_lease=8, wr_lease=4, tsu_capacity=4,
+             shared_sets=4, shared_ways=2, replica_sets=2, replica_ways=2,
+             max_in_flight=2)
+# near-TS_MAX leases + a 2-entry TSU: every few ops trigger the 16-bit
+# overflow reinit or a victim eviction
+OVERFLOW = dict(n_shards=1, rd_lease=protocol.TS_MAX // 2, wr_lease=20000,
+                tsu_capacity=2, shared_sets=2, shared_ways=1,
+                replica_sets=1, replica_ways=2, max_in_flight=0)
+
+KEYS = [f"k{i}" for i in range(8)]
+
+
+def random_trace(rng, n_ops, n_replicas, wr_choices=(None,), n_nodes=2):
+    ops = []
+    for t in range(n_ops):
+        r = int(rng.integers(n_replicas))
+        k = KEYS[int(rng.integers(len(KEYS)))]
+        c = rng.random()
+        wl = wr_choices[int(rng.integers(len(wr_choices)))]
+        if c < 0.45:
+            ops.append(Op("read", k, replica=r))
+        elif c < 0.8:
+            ops.append(Op("write", k, f"v{t}", replica=r, wr_lease=wl))
+        elif c < 0.85:
+            ops.append(Op("fence"))
+        elif c < 0.9:
+            ops.append(Op("mm_write", k, f"m{t}", wr_lease=wl))
+        elif c < 0.95:
+            ops.append(Op("publish", k, f"p{t}",
+                          node=int(rng.integers(n_nodes))))
+        else:
+            ops.append(Op("mm_read", k))
+    return ops
+
+
+def build_pair(cfg_kw, n_nodes=2, replicas_per_node=2):
+    cfg = FabricConfig(**cfg_kw)
+    return (HostFabric(cfg, n_nodes=n_nodes,
+                       replicas_per_node=replicas_per_node),
+            ArrayFabric(cfg, n_nodes=n_nodes,
+                        replicas_per_node=replicas_per_node))
+
+
+def assert_equivalent(host, arr, ops):
+    hres = host.apply(ops)
+    ares = arr.apply(ops)
+    for i, ((op, hr), (_, ar)) in enumerate(zip(hres, ares)):
+        assert hr == ar, f"op {i} ({op.kind} {op.key!r}): {hr!r} != {ar!r}"
+    assert host.grant_log == arr.grant_log, "MM grant logs diverged"
+    assert host.stats() == arr.stats(), "FabricStats diverged"
+    for r in range(host.n_replicas):
+        assert host.replica_stats(r) == arr.replica_stats(r), \
+            f"replica {r} mirror counters diverged"
+    for k in KEYS:
+        assert host.memts(k) == arr.memts(k), f"memts({k!r}) diverged"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_differential_random_trace(seed):
+    host, arr = build_pair(SMALL)
+    ops = random_trace(np.random.default_rng(seed), 350, 4)
+    assert_equivalent(host, arr, ops)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_differential_overflow_reinit_and_tsu_eviction(seed):
+    """Forced 16-bit wraps + constant victim eviction in a 2-entry TSU."""
+    host, arr = build_pair(OVERFLOW, n_nodes=1, replicas_per_node=2)
+    ops = random_trace(np.random.default_rng(seed), 250, 2,
+                       wr_choices=(None, 1, 30000), n_nodes=1)
+    assert_equivalent(host, arr, ops)
+    assert host.stats()["overflow_reinits"] > 0, "overflow never triggered"
+    assert host.stats()["tsu_evictions"] > 0, "eviction never triggered"
+
+
+def test_read_batch_two_phase_parity():
+    """The batched read contract (hits vectorized first, misses in order)
+    produces identical results, stats and mirrors on both backends."""
+    host, arr = build_pair(SMALL)
+    rng = np.random.default_rng(7)
+    warm = random_trace(rng, 120, 4)
+    host.apply(warm)
+    arr.apply(warm)
+    batch = [KEYS[int(rng.integers(len(KEYS)))] for _ in range(32)]
+    batch.append("never-written")       # unknown key exercises phase 2
+    assert host.read_batch(batch, replica=1) == arr.read_batch(batch,
+                                                               replica=1)
+    assert host.stats() == arr.stats()
+    assert host.replica_stats(1) == arr.replica_stats(1)
+
+
+def test_fast_path_equals_scan_path_on_all_hit_batch():
+    """Phase 1 (one vectorized tier_probe) is bit-identical to the op-scan
+    on an all-hit batch — results, counters, and the full device state."""
+    import jax
+
+    a1 = ArrayFabric(FabricConfig(**SMALL), n_nodes=1, replicas_per_node=1)
+    a2 = ArrayFabric(FabricConfig(**SMALL), n_nodes=1, replicas_per_node=1)
+    keys = KEYS[:4]
+    for b in (a1, a2):
+        for k in keys:
+            b.write(k, f"{k}@0")
+        b.fence()
+    r1 = a1.read_batch(keys)                                  # fast path
+    r2 = [x for _, x in a2.apply([Op("read", k) for k in keys])]
+    assert r1 == r2
+    assert a1.fast_read_batches == 1
+    assert a1.stats() == a2.stats()
+    for x, y in zip(jax.tree_util.tree_leaves(a1._af),
+                    jax.tree_util.tree_leaves(a2._af)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_single_transition_layer():
+    """Acceptance pin: both consumers import the rules from core.state."""
+    from repro.coherence.fabric import arrays
+    from repro.core import engine, state
+    assert engine.S is state
+    assert arrays.S is state
+
+
+# ---------------------------------------------------------------- fuzzing
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # CI installs it via the [test] extra
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _op = st.one_of(
+        st.tuples(st.just("read"), st.integers(0, 3),
+                  st.sampled_from(KEYS)),
+        st.tuples(st.just("write"), st.integers(0, 3),
+                  st.sampled_from(KEYS)),
+        st.tuples(st.just("fence"), st.just(0), st.just(KEYS[0])),
+        st.tuples(st.just("mm_write"), st.just(0), st.sampled_from(KEYS)),
+        st.tuples(st.just("publish"), st.integers(0, 1),
+                  st.sampled_from(KEYS)),
+        st.tuples(st.just("mm_read"), st.just(0), st.sampled_from(KEYS)),
+    )
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(_op, min_size=1, max_size=60))
+    def test_hypothesis_differential(trace):
+        host, arr = build_pair(SMALL)
+        ops = []
+        for t, (kind, idx, key) in enumerate(trace):
+            if kind == "fence":
+                ops.append(Op("fence"))
+            elif kind == "publish":
+                ops.append(Op("publish", key, f"p{t}", node=idx))
+            elif kind in ("mm_write", "write"):
+                ops.append(Op(kind, key, f"v{t}", replica=idx))
+            else:
+                ops.append(Op(kind, key, replica=idx))
+        assert_equivalent(host, arr, ops)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_differential():
+        pass

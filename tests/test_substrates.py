@@ -115,9 +115,12 @@ def test_server_prefix_cache_coherence():
     reqs = [Request(rid=i, prompt=prompt, max_new=4) for i in range(4)]
     out = srv.serve(reqs)
     assert set(out) == {0, 1, 2, 3}
-    # identical prompt batches: second batch hits the lease cache
+    # the call's identical groups share ONE batched probe + one prefill;
+    # a repeated serve is a lease hit (no second prefill write-through)
+    out2 = srv.serve(reqs)
     assert srv.cache_stats["hits"] >= 1
     np.testing.assert_array_equal(out[0], out[2])
+    np.testing.assert_array_equal(out[0], out2[0])
 
 
 def test_lease_kv_cache_protocol_semantics():
