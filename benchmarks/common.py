@@ -46,9 +46,15 @@ def _fingerprint(fn: Callable, script: Optional[str] = None) -> str:
         import repro.coherence.fabric
         import repro.core
         import repro.kernels
+        import repro.launch.mesh
+        import repro.sharding
         for pkg in (repro.core, repro.kernels, repro.coherence.fabric):
             paths.extend(sorted(pathlib.Path(pkg.__file__).parent
                                 .glob("*.py")))
+        # mesh-layout sources: a fabric/sharding rule change must
+        # invalidate cached artifacts too
+        paths.append(pathlib.Path(repro.sharding.__file__))
+        paths.append(pathlib.Path(repro.launch.mesh.__file__))
     except ImportError:
         pass
     h = hashlib.sha256()

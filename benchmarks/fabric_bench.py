@@ -23,6 +23,14 @@ plus the array-native headline (DESIGN.md §7):
                     are bit-identical (tests/test_fabric_parity.py); this
                     row is the wall-clock payoff.
 
+  sharded_serving — the mesh-placed fabric (DESIGN.md §8): identical mixed
+                    read/republish streams through the 1-device ArrayFabric
+                    and the ShardedArrayFabric on every visible device (8
+                    under CI's forced host mesh), with the Fig-10 traffic
+                    split the sharded run measured.  BENCH_fabric.json's
+                    ``_meta`` records shard count, device kind, git SHA and
+                    jax version so the trajectory is comparable across PRs.
+
 Results land in benchmarks/artifacts AND a root-level ``BENCH_fabric.json``
 (the repo's perf trajectory file: batched vs host ops/sec + sweep wall).
 
@@ -44,7 +52,8 @@ import numpy as np
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
 from repro.coherence.fabric import (ArrayFabric, FabricConfig,  # noqa: E402
-                                    HostFabric, ReplicaCache, SharedCache,
+                                    HostFabric, ReplicaCache,
+                                    ShardedArrayFabric, SharedCache,
                                     TSUFabric)
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
@@ -179,6 +188,59 @@ def scenario_batched_serving(ops: int = 16384, n_hot: int = 1024,
     }
 
 
+def scenario_sharded_serving(ops: int = 8192, n_hot: int = 256,
+                             batch: int = 1024, n_shards: int = 8) -> dict:
+    """Mesh-placed vs single-device fabric on IDENTICAL op streams
+    (mixed leased reads + periodic republish, so the TSU path and its
+    cross-shard collective hops actually run): 1-device ``ArrayFabric``
+    against ``ShardedArrayFabric`` on however many devices this process
+    sees (8 under CI's forced host mesh).  Both are bit-identical by the
+    parity contract; the row records the wall-clock of shard-local grant
+    execution plus the Fig-10 traffic split the sharded run measured."""
+    import jax
+
+    cfg = FabricConfig(n_shards=n_shards, rd_lease=8, wr_lease=4,
+                       replica_sets=256, replica_ways=8,
+                       shared_sets=512, shared_ways=8)
+    hot = [f"prefix/{i}" for i in range(n_hot)]
+    rng = np.random.default_rng(0)
+    n_batches = max(2, ops // batch)
+    batches = [[hot[i] for i in rng.integers(0, n_hot, batch)]
+               for _ in range(n_batches)]
+
+    def drive(backend):
+        backend.write_batch([(k, f"{k}@0") for k in hot], replica=0)
+        backend.fence()
+        backend.read_batch(hot, replica=1)           # fill replica tier
+        backend.read_batch(batches[0], replica=1)    # compile bench shape
+        t0 = time.time()
+        for t, ks in enumerate(batches):
+            backend.read_batch(ks, replica=1)
+            if t % 4 == 3:       # republish: lease expiry + TSU round trip
+                backend.write(hot[t % n_hot], f"v@{t}", replica=0)
+        return time.time() - t0
+
+    single = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    sharded = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    single_s = drive(single)
+    sharded_s = drive(sharded)
+    assert single.stats() == sharded.stats(), \
+        "sharded serving diverged from the single-device fabric"
+    st = sharded.stats()
+    n = n_batches * batch
+    return {
+        "ops": n, "batch": batch, "n_hot": n_hot, "n_shards": n_shards,
+        "shard_devices": sharded.n_shard_devices,
+        "single_ops_per_sec": round(n / single_s, 1),
+        "sharded_ops_per_sec": round(n / sharded_s, 1),
+        "sharded_over_single": round(single_s / sharded_s, 3),
+        "bytes_inter_gpu": st["bytes_inter_gpu"],
+        "bytes_l2_mm": st["bytes_l2_mm"],
+        "bytes_l1_l2": st["bytes_l1_l2"],
+        "inval_msgs": st["inval_msgs"],       # 0 by construction (Fig 10)
+    }
+
+
 def summarize(stats):
     d = stats.to_dict()
     lookups = d["l1_hits"] + d["l1_to_l2"]
@@ -188,15 +250,43 @@ def summarize(stats):
     return d
 
 
-def write_bench_json(sweep_wall_s: float, serving: dict) -> None:
+def _bench_meta(sharded: dict) -> dict:
+    """Environment fingerprint for the perf trajectory: rows are only
+    comparable across PRs when shard/device/jax provenance is recorded."""
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=pathlib.Path(__file__).parent,
+                             timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "generated_by": "benchmarks/fabric_bench.py",
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "device_kind": jax.devices()[0].platform,
+        "n_devices": len(jax.devices()),
+        "fabric_shards": sharded.get("n_shards"),
+        "fabric_shard_devices": sharded.get("shard_devices"),
+    }
+
+
+def write_bench_json(sweep_wall_s: float, serving: dict,
+                     sharded: dict) -> None:
     """Root-level perf-trajectory artifact (ISSUE 3 satellite): the
-    batched-vs-host ops/sec headline plus the lease-sweep wall-clock."""
+    batched-vs-host ops/sec headline, the sharded-serving row (ISSUE 4),
+    and the lease-sweep wall-clock."""
     BENCH_PATH.write_text(json.dumps({
         "batched_serving": serving,
+        "sharded_serving": sharded,
         "lease_sweep": {"wall_s": round(sweep_wall_s, 2),
                         "scenarios": list(SCENARIOS),
                         "lease_grid": LEASE_GRID},
-        "_meta": {"generated_by": "benchmarks/fabric_bench.py"},
+        "_meta": _bench_meta(sharded),
     }, indent=1))
     print(f"wrote {BENCH_PATH}", file=sys.stderr)
 
@@ -222,6 +312,9 @@ def run(force: bool = False, mini: bool = False) -> None:
         out["_sweep_wall_s"] = time.time() - t_sweep
         out["_batched_serving"] = scenario_batched_serving(
             ops=2048 if mini else 16384)
+        out["_sharded_serving"] = scenario_sharded_serving(
+            ops=2048 if mini else 8192, n_hot=128 if mini else 256,
+            batch=512 if mini else 1024)
         return out
 
     # distinct cache names: mini and full runs must never serve each
@@ -241,7 +334,35 @@ def run(force: bool = False, mini: bool = False) -> None:
                 f"speedup={srv['batched_speedup']}x;"
                 f"host_ops={srv['host_ops_per_sec']};"
                 f"array_ops={srv['array_ops_per_sec']}")
-    write_bench_json(out["_sweep_wall_s"], srv)
+    shd = out["_sharded_serving"]
+    common.emit("fabric/sharded_serving", 1e6 / shd["sharded_ops_per_sec"],
+                f"devices={shd['shard_devices']};"
+                f"shards={shd['n_shards']};"
+                f"vs_single={shd['sharded_over_single']}x;"
+                f"inter_gpu_bytes={shd['bytes_inter_gpu']}")
+    write_bench_json(out["_sweep_wall_s"], srv, shd)
+
+
+def merge_sharded_row(ops: int) -> None:
+    """Run ONLY the sharded_serving scenario and merge its row into an
+    existing BENCH_fabric.json.  CI uses this under the forced 8-device
+    mesh: the batched_serving trajectory row must come from an UNFORCED
+    run (splitting the CPU into 8 host devices would skew it and break
+    cross-PR comparability), while the sharded row wants the real mesh."""
+    shd = scenario_sharded_serving(ops=max(1024, min(ops, 8192)),
+                                   n_hot=128, batch=512)
+    try:
+        blob = json.loads(BENCH_PATH.read_text())
+    except (OSError, json.JSONDecodeError):
+        blob = {}
+    blob["sharded_serving"] = shd
+    meta = blob.setdefault("_meta", _bench_meta(shd))
+    meta["fabric_shards"] = shd["n_shards"]
+    meta["fabric_shard_devices"] = shd["shard_devices"]
+    BENCH_PATH.write_text(json.dumps(blob, indent=1))
+    print(f"sharded_serving {shd['sharded_ops_per_sec']:,.0f} ops/s on "
+          f"{shd['shard_devices']} device(s); merged into {BENCH_PATH}",
+          flush=True)
 
 
 def main():
@@ -252,7 +373,14 @@ def main():
                     default=ART / "fabric_bench.json")
     ap.add_argument("--skip-batched", action="store_true",
                     help="lease sweep only (no jit compile; fast smoke)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="run only sharded_serving and merge the row into "
+                         "BENCH_fabric.json (CI's forced-mesh step)")
     args = ap.parse_args()
+
+    if args.sharded_only:
+        merge_sharded_row(args.ops)
+        return
 
     t0 = time.time()
     out = {}
@@ -274,7 +402,13 @@ def main():
         print(f"batched_serving host={srv['host_ops_per_sec']:,.0f} ops/s "
               f"array={srv['array_ops_per_sec']:,.0f} ops/s "
               f"speedup={srv['batched_speedup']}x", flush=True)
-        write_bench_json(sweep_wall, srv)
+        shd = scenario_sharded_serving(ops=max(2048, min(args.ops * 2, 8192)))
+        out["sharded_serving"] = shd
+        print(f"sharded_serving {shd['sharded_ops_per_sec']:,.0f} ops/s on "
+              f"{shd['shard_devices']} device(s) "
+              f"(vs single-device {shd['single_ops_per_sec']:,.0f}; "
+              f"inter_gpu_bytes={shd['bytes_inter_gpu']})", flush=True)
+        write_bench_json(sweep_wall, srv, shd)
     out["_meta"] = {"ops": args.ops, "lease_grid": LEASE_GRID,
                     "wall_s": round(time.time() - t0, 2)}
     args.json.parent.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,148 @@
+"""Fig 10: per-link network traffic, invalidation vs data — the paper's
+headline claim that timestamp self-invalidation ELIMINATES invalidation
+traffic on the low-bandwidth inter-GPU links.
+
+Driven by the batched sweep engine over the new per-link byte counters
+(``core.state.link_bytes`` -> ``engine.COUNTERS``: bytes_l1_l2,
+bytes_l2_mm, bytes_inter_gpu).  The HMG directory protocol pays
+``CTRL_BYTES`` per invalidation message on the inter-GPU links
+(``inval_msgs``); HALCONE's inter-GPU bytes decompose to pure data — the
+invalidation component is zero BY CONSTRUCTION, which this script asserts
+per cell, not just plots.
+
+The same three counters are exported by the production fabric
+(``FabricStats``; parity-pinned in tests/test_fabric_parity.py), so a
+served trace decomposes row-for-row against these simulated bars.
+
+Writes ``benchmarks/artifacts/fig10_traffic[_mini].json`` and (when
+matplotlib is importable) ``benchmarks/artifacts/fig10_traffic.png``.
+``mini=True`` is the CI footprint: 2 benchmarks at small ROUNDS.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import cached, emit
+from repro.core import traces
+from repro.core.state import CTRL_BYTES
+from repro.core.sysconfig import rdma_wb_hmg, sm_wt_halcone
+
+ROUNDS = 2048
+GEOM = dict(pcie_lat=1000.0)       # same geometry as the Fig 7 sweep
+CONFIGS = [
+    ("RDMA-WB-C-HMG", rdma_wb_hmg),        # directory: invalidations flow
+    ("SM-WT-C-HALCONE", sm_wt_halcone),    # timestamps: none can
+]
+LINKS = ("bytes_l1_l2", "bytes_l2_mm", "bytes_inter_gpu")
+# The in-place benchmarks update READ-WRITE SHARED data (the accesses that
+# actually need coherence — BenchModel.rw_share documents exactly this for
+# fws/bs).  The Fig-7/8/9 speedup sweeps run the streaming mixes
+# unchanged; THIS figure is about invalidation traffic, so it enables the
+# documented in-place write-sharing for those workloads — otherwise no
+# protocol ever invalidates and the claim is vacuous.
+RW_SHARE = {"bs": 0.10, "fws": 0.15, "bfs": 0.05}
+MINI_BENCHES = ["bs", "fws"]
+MINI_ROUNDS = 256
+
+
+def _bench(name: str) -> traces.BenchModel:
+    m = traces.STANDARD[name]
+    return dataclasses.replace(m, rw_share=RW_SHARE.get(name, m.rw_share))
+
+
+def run_all(force: bool = False, mini: bool = False):
+    benches = MINI_BENCHES if mini else list(traces.STANDARD)
+    rounds = MINI_ROUNDS if mini else ROUNDS
+
+    def compute():
+        base = sm_wt_halcone(**GEOM)
+        named = {b: traces.standard_trace(base, _bench(b), rounds)
+                 for b in benches}
+        return common.sweep([(n, mk(**GEOM)) for n, mk in CONFIGS], named,
+                            measure_sequential=False)
+
+    name = "fig10_traffic_mini" if mini else "fig10_traffic"
+    return cached(name, compute, force, script=__file__)
+
+
+def decompose(data) -> dict:
+    """Per (config, benchmark): the three per-link byte totals, with the
+    inter-GPU bytes split into invalidation vs data components."""
+    cnames, bnames = data["configs"], data["benchmarks"]
+    ctr = data["counters"]
+    out = {"configs": cnames, "benchmarks": bnames, "links": {}}
+    for link in LINKS:
+        out["links"][link] = [[float(ctr[link][ci][bi])
+                               for bi in range(len(bnames))]
+                              for ci in range(len(cnames))]
+    inval = [[float(ctr["inval_msgs"][ci][bi]) * CTRL_BYTES
+              for bi in range(len(bnames))] for ci in range(len(cnames))]
+    out["inter_gpu_inval_bytes"] = inval
+    out["inter_gpu_data_bytes"] = [
+        [out["links"]["bytes_inter_gpu"][ci][bi] - inval[ci][bi]
+         for bi in range(len(bnames))] for ci in range(len(cnames))]
+    return out
+
+
+def _plot(dec, path) -> bool:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return False
+    cnames, bnames = dec["configs"], dec["benchmarks"]
+    x = np.arange(len(bnames), dtype=float)
+    width = 0.8 / len(cnames)
+    fig, axes = plt.subplots(1, 2, figsize=(11, 4))
+    for ci, cname in enumerate(cnames):
+        off = (ci - (len(cnames) - 1) / 2) * width
+        data_b = np.asarray(dec["inter_gpu_data_bytes"][ci])
+        inval_b = np.asarray(dec["inter_gpu_inval_bytes"][ci])
+        axes[0].bar(x + off, data_b, width, label=f"{cname} data")
+        axes[0].bar(x + off, inval_b, width, bottom=data_b,
+                    label=f"{cname} inval", hatch="//")
+        axes[1].bar(x + off, np.asarray(dec["links"]["bytes_l2_mm"][ci]),
+                    width, label=cname)
+    axes[0].set_title("inter-GPU link bytes (data vs invalidation)")
+    axes[1].set_title("L2<->MM link bytes")
+    for ax in axes:
+        ax.set_xticks(x, bnames, rotation=45, fontsize=7)
+        ax.legend(fontsize=6)
+    fig.tight_layout()
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return True
+
+
+def main(force: bool = False, mini: bool = False):
+    data = run_all(force, mini)
+    dec = decompose(data)
+    cnames, bnames = dec["configs"], dec["benchmarks"]
+    hc = cnames.index("SM-WT-C-HALCONE")
+    hmg = cnames.index("RDMA-WB-C-HMG")
+    # the claim itself, asserted per cell: no invalidation byte ever
+    # travels in HALCONE, while HMG pays them on every shared write
+    assert all(v == 0.0 for v in dec["inter_gpu_inval_bytes"][hc]), \
+        "HALCONE produced invalidation traffic — the protocol is broken"
+    total_hmg_inval = sum(dec["inter_gpu_inval_bytes"][hmg])
+    for bi, b in enumerate(bnames):
+        emit(f"fig10/{b}/inter_gpu", 0.0,
+             f"hmg_data={dec['inter_gpu_data_bytes'][hmg][bi]:.0f}B;"
+             f"hmg_inval={dec['inter_gpu_inval_bytes'][hmg][bi]:.0f}B;"
+             f"halcone_data={dec['inter_gpu_data_bytes'][hc][bi]:.0f}B;"
+             f"halcone_inval=0B")
+    emit("fig10/claim", 0.0,
+         f"halcone_inval_bytes=0;hmg_inval_bytes={total_hmg_inval:.0f};"
+         f"claim={'OK' if total_hmg_inval > 0 else 'HMG-SILENT'}")
+    png = common.ART / "fig10_traffic.png"
+    if not mini and _plot(dec, png):
+        emit("fig10/plot", 0.0, f"png={png.name}")
+    return dec
+
+
+if __name__ == "__main__":
+    main()

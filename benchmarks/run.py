@@ -4,10 +4,12 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run [--force] [--only fig7,...]
   PYTHONPATH=src python -m benchmarks.run --suite figures [--mini]
 
-``--suite figures`` drives the three figure scripts through the batched
-sweep engine (one jit per grid, DESIGN.md §5) and writes one consolidated
-artifact ``benchmarks/artifacts/figures.json`` (``figures_mini.json`` with
-``--mini`` — the CI footprint: 2 configs x 2 benchmarks, small ROUNDS).
+``--suite figures`` drives the figure scripts (fig7/8/9 + the Fig-10
+per-link traffic decomposition) through the batched sweep engine (one jit
+per grid, DESIGN.md §5) and writes one consolidated artifact
+``benchmarks/artifacts/figures.json`` (``figures_mini.json`` with
+``--mini`` — the CI footprint: 2 configs x 2 benchmarks, small ROUNDS;
+mini keeps fig7 + fig10).
 
 The ``fabric`` suite additionally writes the ROOT-LEVEL perf-trajectory
 file ``BENCH_fabric.json`` (batched-vs-host serving ops/sec + lease-sweep
@@ -25,11 +27,13 @@ from benchmarks.common import ART
 
 
 def run_figures(force: bool, mini: bool) -> None:
-    """The figure trio on the batched sweep engine + consolidated JSON."""
-    from benchmarks import fig7_speedup, fig8_scaling, fig9_xtreme
+    """The figure suite on the batched sweep engine + consolidated JSON."""
+    from benchmarks import (fig7_speedup, fig8_scaling, fig9_xtreme,
+                            fig10_traffic)
 
     consolidated = {"mini": mini}
     consolidated["fig7"] = fig7_speedup.main(force=force, mini=mini)
+    consolidated["fig10"] = fig10_traffic.main(force=force, mini=mini)
     if not mini:
         consolidated["fig8"] = fig8_scaling.main(force=force)
         consolidated["fig9"] = fig9_xtreme.main(force=force)
@@ -44,7 +48,7 @@ def main() -> None:
                     help="recompute instead of using cached artifacts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig7,fig8,fig9,"
-                         "lease,kernels,roofline,fabric)")
+                         "fig10,lease,kernels,roofline,fabric)")
     ap.add_argument("--suite", default="", choices=["", "figures"],
                     help="figures: fig7+fig8+fig9 via the batched sweep "
                          "engine, consolidated into one JSON artifact")
@@ -63,13 +67,14 @@ def main() -> None:
     import functools
 
     from benchmarks import (fabric_bench, fig2_rdma_gap, fig7_speedup,
-                            fig8_scaling, fig9_xtreme, kernel_bench,
-                            lease_sensitivity, roofline)
+                            fig8_scaling, fig9_xtreme, fig10_traffic,
+                            kernel_bench, lease_sensitivity, roofline)
     suites = [
         ("fig2", fig2_rdma_gap.main),
         ("fig7", fig7_speedup.main),
         ("fig8", fig8_scaling.main),
         ("fig9", fig9_xtreme.main),
+        ("fig10", functools.partial(fig10_traffic.main, mini=args.mini)),
         ("lease", lease_sensitivity.main),
         ("kernels", kernel_bench.main),
         ("roofline", roofline.main),

@@ -4,7 +4,10 @@ Layout (DESIGN.md §3, §7):
   backend.py — FabricBackend: the one lease API; HostFabric = the
                host-object oracle behind it
   arrays.py  — ArrayFabric: the array-native production backend (state as
-               core.state pytrees, ops applied as one jitted scan)
+               core.state pytrees, ops applied as one jitted scan);
+               ShardedArrayFabric: the same scan as a shard_map body with
+               TSU shards placed along the "fabric" mesh axis (DESIGN.md
+               §8); default_fabric(): picks between them by device count
   tsu.py     — TSUShard / TSUFabric: the host MM+TSU authority
   cache.py   — ReplicaCache over SharedCache: the host L1-over-L2 tiers
   writeq.py  — WriteQueue: bounded posted write-throughs + fence
@@ -15,7 +18,9 @@ Layout (DESIGN.md §3, §7):
 (`repro.core.engine`) is the same protocol run under a timing model, and
 both import their transition rules from `repro.core.state`.
 """
-from repro.coherence.fabric.arrays import ArrayFabric  # noqa: F401
+from repro.coherence.fabric.arrays import (ArrayFabric,  # noqa: F401
+                                           ShardedArrayFabric,
+                                           default_fabric)
 from repro.coherence.fabric.backend import (FabricBackend,  # noqa: F401
                                             HostFabric, Op)
 from repro.coherence.fabric.cache import ReplicaCache, SharedCache  # noqa: F401

@@ -37,6 +37,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.coherence.fabric.backend import (GRANT_LOG_LEN, FabricBackend,
                                             Op, _bounded)
@@ -44,6 +45,7 @@ from repro.coherence.fabric.tsu import FabricConfig, stable_hash
 from repro.core import protocol
 from repro.core import state as S
 from repro.core.state import TSUState, TierState
+from repro.sharding import named_sharding, shard_map
 
 _NOP, _READ, _WRITE, _FENCE, _MM_WRITE, _PUBLISH, _MM_READ = range(7)
 _PRUNE_EVERY = 4096          # payload-map GC cadence, in completed writes
@@ -52,11 +54,13 @@ _KIND = {"read": _READ, "write": _WRITE, "fence": _FENCE,
 
 # global counters (the FabricStats names this backend can ever bump);
 # wb_evictions / inval_msgs are 0 by construction, as the paper claims.
+# The bytes_* triple is the Fig-10 per-link traffic (state.link_bytes),
+# counted at the same transitions the host objects count it.
 _G_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2", "l2_to_mm",
            "coh_miss_l1", "coh_miss_l2", "pcie_blocks", "write_throughs",
            "self_invalidations", "compulsory", "refetches",
            "capacity_evictions", "tsu_evictions", "overflow_reinits",
-           "fences")
+           "fences", "bytes_l1_l2", "bytes_l2_mm", "bytes_inter_gpu")
 # the per-replica mirror subset (host ReplicaCache.stats semantics)
 _R_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2",
            "coh_miss_l1", "coh_miss_l2", "self_invalidations", "compulsory",
@@ -94,15 +98,69 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _af_pspecs() -> _AF:
+    """The fabric state's mesh layout as a ``PartitionSpec`` prefix tree:
+    the TSU table and its per-shard sequencers (version / gseq / alloc-seq
+    side arrays, next-seq counters) live along the ``fabric`` axis — shard
+    rows ``[d*KS/D, (d+1)*KS/D)`` on device ``d`` — while the client tiers,
+    write-queue rings and counters are replicated (every device derives
+    the identical update from replicated op inputs + broadcast grants)."""
+    F, R = P("fabric"), P()
+    return _AF(rp=R, rp_gseq=R, rp_tick=R, sh=R, sh_gseq=R, sh_tick=R,
+               tsu=F, tsu_ver=F, tsu_gseq=F, tsu_seq=F, tsu_nseq=F,
+               gseq_next=R, wq=R, wq_head=R, wq_len=R, g=R, r=R)
+
+
 @functools.lru_cache(maxsize=32)
-def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
+def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None):
     """The jitted op-scan for one static geometry.  Cached so every
-    ArrayFabric instance with the same shape shares one compilation."""
+    ArrayFabric instance with the same shape shares one compilation.
+
+    With ``MESH`` (a 1-axis ``fabric`` mesh) the scan becomes a
+    ``repro.sharding.shard_map`` body: the TSU table and its per-shard
+    sequencers are laid out along the mesh axis (each device owns
+    ``KS / D`` contiguous shards — the paper's one-TSU-per-HBM-stack
+    placement), every op's TSU transition executes ONLY on its key's
+    owning device, and the grant (wts/rts/version + counter flags) is the
+    one thing that travels — an ``all_gather`` over the fabric axis, the
+    measured inter-GPU hop.  Client tiers, write-queue rings and counters
+    stay replicated: they are updated by identical arithmetic on every
+    device (all op inputs and broadcast grants are replicated), so the
+    sharded scan is bit-identical to the single-device one.  The rare-op
+    ``lax.cond`` gates of the single-device path are replaced by masked
+    execution so each device runs the same symmetric collective sequence.
+    """
     i32 = jnp.int32
     one = jnp.ones((), i32)
     zero = jnp.zeros((), i32)
     NG, NRK = len(_G_KEYS), len(_R_KEYS)
     b2i = lambda b: b.astype(i32)
+
+    sharded = MESH is not None
+    D = int(MESH.devices.size) if sharded else 1
+    SPD = KS // D                    # shards per device (divisibility checked
+                                     # by the caller)
+    if sharded:
+        def shard_ctx(shard):
+            """Route a (global) home-shard id: the device-local row, an
+            am-I-the-owner mask, and the owning device's axis index."""
+            me = jax.lax.axis_index("fabric").astype(i32)
+            owner = shard // SPD
+            lsh = jnp.clip(shard - me * SPD, 0, SPD - 1)
+            return lsh, owner == me, owner
+
+        def bcast(owner, *vals):
+            """The cross-shard hop: the owner's scalars travel over the
+            fabric axis (all_gather), everyone selects the owner's row."""
+            rows = jax.lax.all_gather(jnp.stack(vals), "fabric")   # [D, n]
+            row = rows[owner]
+            return tuple(row[i] for i in range(len(vals)))
+    else:
+        def shard_ctx(shard):
+            return shard, jnp.ones((), bool), zero
+
+        def bcast(owner, *vals):
+            return vals
 
     def gv(**kw):
         """One [NG] increment vector — a single add per counter block."""
@@ -173,53 +231,64 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
     def mm_write1(af, key, shard, wl, rd, wr, active):
         """TSUShard.mm_write: allocate (evicting the min-(memts, alloc-seq)
         entry when the shard is full), grant via Algorithm 3 + overflow
-        reinit, bump the version."""
-        th, way = tsu_probe(af, shard, key)
+        reinit, bump the version.  Sharded: the transition executes on the
+        owning device only; the grant travels back via ``bcast``."""
+        lsh, mine, owner = shard_ctx(shard)
+        local = active & mine
+        th, way = tsu_probe(af, lsh, key)
         vic = S.victim_lex(af.tsu.tag, af.tsu.memts, af.tsu_seq,
-                           shard[None], zero[None])[0]
-        full = (af.tsu.tag[shard, 0][:CAP] != S.INVALID).all()
-        evict = active & ~th & full
+                           lsh[None], zero[None])[0]
+        full = (af.tsu.tag[lsh, 0][:CAP] != S.INVALID).all()
+        evict = local & ~th & full
         w0 = jnp.where(th, way, vic)
-        memts = jnp.where(th, af.tsu.memts[shard, 0, w0], 0)
+        memts = jnp.where(th, af.tsu.memts[lsh, 0, w0], 0)
         wl_eff = jnp.where(wl >= 0, wl, wr)
         gr = S.tsu_lease(memts[None], jnp.ones((1,), bool), rd, wl_eff[None])
         mwts, mrts, nmem, ovf = (gr.wts[0], gr.rts[0], gr.new_memts[0],
                                  gr.overflow[0])
-        ver = jnp.where(th, af.tsu_ver[shard, 0, w0] + 1, 1)
-        seqv = jnp.where(th, af.tsu_seq[shard, 0, w0], af.tsu_nseq[shard])
+        ver = jnp.where(th, af.tsu_ver[lsh, 0, w0] + 1, 1)
+        seqv = jnp.where(th, af.tsu_seq[lsh, 0, w0], af.tsu_nseq[lsh])
         gs = af.gseq_next
-        tsu2 = S.tsu_commit_exact(af.tsu, shard[None], zero[None], w0[None],
-                                  key[None], nmem[None], active[None])
-        w = jnp.where(active, w0, CAP)
+        tsu2 = S.tsu_commit_exact(af.tsu, lsh[None], zero[None], w0[None],
+                                  key[None], nmem[None], local[None])
+        w = jnp.where(local, w0, CAP)
 
         def pt(a, v):
-            return a.at[shard, 0, w].set(
-                jnp.where(active, v, a[shard, 0, w]))
+            return a.at[lsh, 0, w].set(jnp.where(local, v, a[lsh, 0, w]))
 
+        # the grant + counter flags hop from the owning shard's device
+        mwts_b, mrts_b, ver_b, evict_i, ovf_i = bcast(
+            owner, mwts, mrts, ver, b2i(evict), b2i(active & ovf))
         af = af._replace(
             tsu=tsu2, tsu_ver=pt(af.tsu_ver, ver),
             tsu_gseq=pt(af.tsu_gseq, gs), tsu_seq=pt(af.tsu_seq, seqv),
-            tsu_nseq=af.tsu_nseq.at[shard].add(b2i(active & ~th)),
+            tsu_nseq=af.tsu_nseq.at[lsh].add(b2i(local & ~th)),
             gseq_next=af.gseq_next + b2i(active),
-            g=af.g + gv(tsu_evictions=evict, overflow_reinits=active & ovf))
-        return af, mwts, mrts, ver, gs
+            g=af.g + gv(tsu_evictions=evict_i, overflow_reinits=ovf_i))
+        return af, mwts_b, mrts_b, ver_b, gs
 
     def mm_read1(af, key, shard, rd, wr, active):
-        """TSUShard.mm_read: grant only if the entry exists."""
-        th, way = tsu_probe(af, shard, key)
-        found = active & th
-        memts = jnp.where(th, af.tsu.memts[shard, 0, way], 0)
+        """TSUShard.mm_read: grant only if the entry exists (sharded: on the
+        owning device; found/grant/version hop back via ``bcast``)."""
+        lsh, mine, owner = shard_ctx(shard)
+        th, way = tsu_probe(af, lsh, key)
+        local_found = active & mine & th
+        memts = jnp.where(th, af.tsu.memts[lsh, 0, way], 0)
         gr = S.tsu_lease(memts[None], jnp.zeros((1,), bool), rd, wr)
         mwts, mrts, nmem, ovf = (gr.wts[0], gr.rts[0], gr.new_memts[0],
                                  gr.overflow[0])
-        tsu2 = S.tsu_commit_exact(af.tsu, shard[None], zero[None],
+        tsu2 = S.tsu_commit_exact(af.tsu, lsh[None], zero[None],
                                   way[None], key[None], nmem[None],
-                                  found[None])
-        ver = jnp.where(found, af.tsu_ver[shard, 0, way], -1)
-        gs = jnp.where(found, af.tsu_gseq[shard, 0, way], -1)
+                                  local_found[None])
+        ver = af.tsu_ver[lsh, 0, way]
+        gs = af.tsu_gseq[lsh, 0, way]
+        th_i, mwts, mrts, ver, gs, ovf_i = bcast(
+            owner, b2i(th), mwts, mrts, ver, gs, b2i(ovf))
+        found = active & (th_i > 0)
         af = af._replace(tsu=tsu2,
-                         g=af.g + gv(overflow_reinits=found & ovf))
-        return af, found, mwts, mrts, ver, gs
+                         g=af.g + gv(overflow_reinits=b2i(found) * ovf_i))
+        return af, found, mwts, mrts, jnp.where(found, ver, -1), \
+            jnp.where(found, gs, -1)
 
     def drain1(af, node, rd, wr, active):
         """WriteQueue._drain_one: pop the oldest posted write, write through
@@ -233,11 +302,14 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
         shard = af.wq["shard"][node, h]
         s1 = af.wq["set1"][node, h]
         s2 = af.wq["set2"][node, h]
+        cross = active & (shard != node % KS)
+        _, b2m, big = S.link_bytes(zero, b2i(active), b2i(cross))
         af = af._replace(
             wq_head=af.wq_head.at[node].set(jnp.where(active, (h + 1) % Q, h)),
             wq_len=af.wq_len.at[node].add(-b2i(active)),
             g=af.g + gv(l2_to_mm=active, write_throughs=active,
-                        pcie_blocks=active & (shard != node % KS)))
+                        pcie_blocks=cross, bytes_l2_mm=b2m,
+                        bytes_inter_gpu=big))
         af, mwts, mrts, ver, gs = mm_write1(af, key, shard, wl, rd, wr,
                                             active)
         # adopt into the node-shared tier (grant lease, node clock advance)
@@ -266,9 +338,10 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
         entry = (jnp.where(active, key, -1), ver, mwts, mrts, gs)
         return af, entry
 
-    def _flush_node(carry, node, rd, wr):
+    def _flush_node(carry, node, rd, wr, gate=None):
         def cond(c):
-            return c[0].wq_len[node] > 0
+            go = c[0].wq_len[node] > 0
+            return go if gate is None else go & gate
 
         def body(c):
             af_, dk, dv, dw, dr_, dg, dc = c
@@ -340,8 +413,14 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
             def _mmw_skip(af):
                 return af, zero, zero, zero, zero
 
-            af, mwtsW, mrtsW, mverW, mgsW = jax.lax.cond(
-                do_mmw, _mmw, _mmw_skip, af)
+            if sharded:
+                # masked, not cond-gated: every device must execute the
+                # same symmetric collective sequence
+                af, mwtsW, mrtsW, mverW, mgsW = mm_write1(
+                    af, key, shard, wl, rd, wr, do_mmw)
+            else:
+                af, mwtsW, mrtsW, mverW, mgsW = jax.lax.cond(
+                    do_mmw, _mmw, _mmw_skip, af)
             mm_used = (need_mm & fndR) | is_mmr & fndR | do_mmw
             mwts = jnp.where(do_mmw, mwtsW, mwtsR)
             mrts = jnp.where(do_mmw, mrtsW, mrtsR)
@@ -392,7 +471,10 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
             def _dr_skip(af):
                 return af, (negs, negs, negs, negs, negs)
 
-            af, e = jax.lax.cond(need_drain, _dr, _dr_skip, af)
+            if sharded:
+                af, e = drain1(af, node, rd, wr, need_drain)
+            else:
+                af, e = jax.lax.cond(need_drain, _dr, _dr_skip, af)
             dk = ldz.at[0].set(e[0])
             dv = ldz.at[0].set(e[1])
             dw = ldz.at[0].set(e[2])
@@ -401,7 +483,8 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
             dc = b2i(need_drain)
 
             # ---- fence: flush every queue (node order), clocks jump to
-            # the global max (rare -> behind a cond)
+            # the global max (rare -> behind a cond; sharded: gated
+            # while-loops so the collective schedule stays symmetric)
             def _fence(af):
                 carry = (af, ldz, ldz, ldz, ldz, ldz, zero)
                 for nd in range(NN):
@@ -416,10 +499,34 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
             def _fence_skip(af):
                 return af, (dk, dv, dw, dr_, dg, dc, zero)
 
-            af, (dk, dv, dw, dr_, dg, dc, gmax) = jax.lax.cond(
-                is_fence, _fence, _fence_skip, af)
+            if sharded:
+                # a fence op is never a write, so (dk..dc) are still the
+                # empty drain log here; the gated flush leaves them
+                # untouched on non-fence ops (zero loop trips everywhere)
+                carry = (af, dk, dv, dw, dr_, dg, dc)
+                for nd in range(NN):
+                    carry = _flush_node(carry, jnp.int32(nd), rd, wr,
+                                        gate=is_fence)
+                af, dk, dv, dw, dr_, dg, dc = carry
+                gmax_all = jnp.maximum(jnp.max(af.rp.cts),
+                                       jnp.max(af.sh.cts))
+                gmax = jnp.where(is_fence, gmax_all, zero)
+                af = af._replace(
+                    rp=af.rp._replace(cts=jnp.where(
+                        is_fence, jnp.full_like(af.rp.cts, gmax_all),
+                        af.rp.cts)),
+                    sh=af.sh._replace(cts=jnp.where(
+                        is_fence, jnp.full_like(af.sh.cts, gmax_all),
+                        af.sh.cts)))
+            else:
+                af, (dk, dv, dw, dr_, dg, dc, gmax) = jax.lax.cond(
+                    is_fence, _fence, _fence_skip, af)
 
             # ---- counters: one vector add per block
+            b12, b2m, big = S.link_bytes(
+                b2i(miss) + b2i(is_write),
+                b2i(need_mm) + b2i(is_mmr) + b2i(do_mmw),
+                b2i(need_mm & home_miss))
             af = af._replace(
                 g=af.g + gv(
                     reads=is_read, writes=is_write, l1_hits=h1, l2_hits=h2,
@@ -431,7 +538,8 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
                     pcie_blocks=need_mm & home_miss,
                     write_throughs=do_mmw, fences=is_fence,
                     refetches=resp_found,
-                    capacity_evictions=b2i(evP) + b2i(evF) + b2i(ev1)),
+                    capacity_evictions=b2i(evP) + b2i(evF) + b2i(ev1),
+                    bytes_l1_l2=b12, bytes_l2_mm=b2m, bytes_inter_gpu=big),
                 r=af.r.at[rep].add(rv(
                     reads=is_read, writes=is_write, l1_hits=h1, l2_hits=h2,
                     l1_to_l2=b2i(miss) + b2i(is_write), coh_miss_l1=coh,
@@ -465,11 +573,19 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD):
 
         return jax.lax.scan(step, af, xs)
 
-    return jax.jit(run)
+    if not sharded:
+        return jax.jit(run)
+    # mesh-placed execution: the TSU-side state is partitioned along the
+    # fabric axis, everything else replicated; the per-op results come
+    # back replicated (identical on every device by construction)
+    af_spec = _af_pspecs()
+    return jax.jit(shard_map(run, MESH,
+                             in_specs=(af_spec, P(), P(), P()),
+                             out_specs=(af_spec, P()), check_vma=False))
 
 
-@functools.lru_cache(maxsize=4)
-def _build_fast_read():
+@functools.lru_cache(maxsize=8)
+def _build_fast_read(mesh=None):
     """Phase 1 of the two-phase batched read (backend.read_batch contract):
     ONE vectorized ``state.tier_probe`` over the whole batch serves every
     replica-tier lease hit — reads under a live lease are pure local
@@ -477,7 +593,13 @@ def _build_fast_read():
     semantics (op i's LRU = tick + its rank among the batch's hits).
     Misses are untouched here; the caller runs them through the exact
     op-scan in op order (phase 2).  Only the replica-tier sub-state flows
-    through the call, keeping dispatch overhead off the hot path."""
+    through the call, keeping dispatch overhead off the hot path.
+
+    With ``mesh`` the probe runs as a ``shard_map`` body over the fabric
+    axis with fully replicated operands: a lease hit is shard-LOCAL by
+    definition (the paper's serving claim — no TSU, no collective, zero
+    inter-GPU bytes), so the body contains no communication at all and
+    its outputs stay replicated."""
     i32 = jnp.int32
 
     def fast(rp, rp_gseq, rp_tick, g, r, meta_s1, kids, rep):
@@ -505,7 +627,10 @@ def _build_fast_read():
         # transfer, keeping the hot-path call payload minimal
         return jnp.stack([hi, ver, gseq]), lru2, tick2, g2, r2
 
-    return jax.jit(fast)
+    if mesh is None:
+        return jax.jit(fast)
+    return jax.jit(shard_map(fast, mesh, in_specs=(P(),) * 8,
+                             out_specs=(P(),) * 5, check_vma=False))
 
 
 class ArrayFabric(FabricBackend):
@@ -519,7 +644,7 @@ class ArrayFabric(FabricBackend):
     """
 
     def __init__(self, cfg: FabricConfig = FabricConfig(),
-                 n_nodes: int = 1, replicas_per_node: int = 1):
+                 n_nodes: int = 1, replicas_per_node: int = 1, mesh=None):
         self.cfg = cfg = _bounded(cfg)
         self.n_nodes = n_nodes
         self.n_replicas = n_nodes * replicas_per_node
@@ -532,10 +657,15 @@ class ArrayFabric(FabricBackend):
         self._CAP = cfg.tsu_capacity
         self._Q = cfg.max_in_flight + 2
         self._LD = n_nodes * cfg.max_in_flight + 1
+        self.mesh = mesh                 # 1-axis "fabric" mesh or None
+        if mesh is not None and self._KS % int(mesh.devices.size):
+            raise ValueError(
+                f"n_shards={self._KS} must be divisible by the fabric "
+                f"mesh's {int(mesh.devices.size)} devices")
         self._run = _build_run(self._S1, self._W1, self._S2, self._W2,
                                self._KS, self._CAP, n_nodes,
                                self.n_replicas, self._Q, cfg.max_in_flight,
-                               self._LD)
+                               self._LD, mesh)
         self._af = self._init_af()
         # host-side payload plumbing (the arrays decide; this only ships)
         self._keys: Dict = {}
@@ -548,7 +678,7 @@ class ArrayFabric(FabricBackend):
         # bounded on BOTH backends with the same cap, so parity-compared
         # logs truncate identically (oracle traces are far shorter)
         self.grant_log = collections.deque(maxlen=GRANT_LOG_LEN)
-        self._fast_read = _build_fast_read()
+        self._fast_read = _build_fast_read(self.mesh)
         self._meta_dev = None           # device-side kid -> set1 table
         self.fast_read_batches = 0      # telemetry: all-hit batches served
         self._writes_since_prune = 0
@@ -558,7 +688,7 @@ class ArrayFabric(FabricBackend):
         z = lambda *s: jnp.zeros(s, i32)
         neg = lambda *s: jnp.full(s, -1, i32)
         Nn, R = self.n_nodes, self.n_replicas
-        return _AF(
+        af = _AF(
             rp=S.init_tier(R, self._S1, self._W1),
             rp_gseq=neg(R, self._S1, self._W1 + 1), rp_tick=z(R),
             sh=S.init_tier(Nn, self._S2, self._W2),
@@ -573,6 +703,20 @@ class ArrayFabric(FabricBackend):
             wq_head=z(Nn), wq_len=z(Nn),
             g=z(len(_G_KEYS)), r=z(R, len(_R_KEYS)),
         )
+        if self.mesh is not None:
+            # lay the state out per _af_pspecs BEFORE the first run: TSU
+            # rows land on their owning devices (sharding.py rules map the
+            # shard-major dims onto the fabric axis), the rest replicated
+            rep = NamedSharding(self.mesh, P())
+            f3 = named_sharding(self.mesh, (self._KS, 1, self._CAP + 1),
+                                ("fabric_shard", None, None))
+            f1 = named_sharding(self.mesh, (self._KS,), ("fabric_shard",))
+            af = jax.device_put(af, _AF(
+                rp=rep, rp_gseq=rep, rp_tick=rep, sh=rep, sh_gseq=rep,
+                sh_tick=rep, tsu=f3, tsu_ver=f3, tsu_gseq=f3, tsu_seq=f3,
+                tsu_nseq=f1, gseq_next=rep, wq=rep, wq_head=rep,
+                wq_len=rep, g=rep, r=rep))
+        return af
 
     # ------------------------------------------------------------- keys
     def _kid(self, key) -> int:
@@ -808,3 +952,65 @@ class ArrayFabric(FabricBackend):
         out = {k: 0 for k in self.stats()}
         out.update({k: int(r[i]) for i, k in enumerate(_R_KEYS)})
         return out
+
+
+class ShardedArrayFabric(ArrayFabric):
+    """The mesh-placed fabric: TSU shards on devices along a ``fabric`` axis.
+
+    HALCONE's TSU is physically distributed — one timestamp storage unit
+    per HBM stack, coherence actions executed local to the memory they
+    guard.  This backend realizes that placement: the ``[n_shards,
+    capacity]`` TSU table (plus the per-shard grant sequencers and
+    version/gseq side arrays) is partitioned over the ``fabric`` mesh axis
+    with ``NamedSharding``, the op-scan runs as a ``repro.sharding.
+    shard_map`` body in which each op's TSU transition executes only on
+    its key's owning device, and ONLY grant results / cross-shard fills
+    travel over collectives — which is exactly the traffic the
+    ``bytes_inter_gpu`` counter measures (Fig. 10).  Client tiers and the
+    write-queue rings stay replicated across the axis.
+
+    Still a ``FabricBackend``, still bit-identical to ``HostFabric`` and
+    to the single-device ``ArrayFabric`` on any op trace
+    (tests/test_fabric_parity.py runs the suite on a forced 8-device host
+    mesh).  ``n_shards`` must be divisible by the mesh size; by default
+    the largest dividing device count is used (``launch.mesh.
+    make_fabric_mesh``), so a 1-device host degenerates to the
+    single-device layout under the same shard_map entry point.
+    """
+
+    def __init__(self, cfg: FabricConfig = FabricConfig(),
+                 n_nodes: int = 1, replicas_per_node: int = 1,
+                 mesh=None, devices=None):
+        cfg = _bounded(cfg)
+        if mesh is None:
+            from repro.launch.mesh import make_fabric_mesh
+            mesh = make_fabric_mesh(n_shards=cfg.n_shards, devices=devices)
+        super().__init__(cfg, n_nodes, replicas_per_node, mesh=mesh)
+
+    @property
+    def n_shard_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+
+def default_fabric(cfg: FabricConfig = FabricConfig(),
+                   n_nodes: int = 1,
+                   replicas_per_node: int = 1) -> ArrayFabric:
+    """The production entry point servers/adapters default to: mesh-placed
+    TSU shards (``ShardedArrayFabric``) whenever the config's shards can
+    actually spread over more than one device, the plain single-device
+    ``ArrayFabric`` otherwise (including n_shards=1 configs on
+    multi-device hosts — a 1-device mesh would pay the shard_map masked
+    execution for zero placement benefit).
+
+    The sharded default trades single-stream throughput for placement:
+    each grant is one collective hop (ROADMAP lists batching cross-shard
+    grants per scan step as the follow-up) in exchange for TSU transitions
+    executing on the device that owns the memory — the paper's layout."""
+    cfg = _bounded(cfg)
+    if len(jax.devices()) > 1:
+        from repro.launch.mesh import make_fabric_mesh
+        mesh = make_fabric_mesh(n_shards=cfg.n_shards)
+        if int(mesh.devices.size) > 1:
+            return ShardedArrayFabric(cfg, n_nodes, replicas_per_node,
+                                      mesh=mesh)
+    return ArrayFabric(cfg, n_nodes, replicas_per_node)

@@ -20,6 +20,7 @@ import dataclasses
 from typing import Any, List, Optional, Tuple
 
 from repro.core import protocol
+from repro.core.state import BLOCK_BYTES
 from repro.coherence.fabric.stats import FabricStats
 from repro.coherence.fabric.tsu import LeaseGrant, TSUFabric, stable_hash
 from repro.coherence.fabric.writeq import WriteQueue
@@ -195,6 +196,9 @@ class ReplicaCache:
         else:
             _bump(stats, "compulsory")
         _bump(stats, "l1_to_l2")
+        # link bytes accrue on the fabric-global view only (the per-replica
+        # mirror keeps the simulator-shared subset)
+        self.shared.fabric.stats.bump("bytes_l1_l2", BLOCK_BYTES)
         got = self.shared.get(key, mirror=self.stats)
         if got is None:
             return None
@@ -210,6 +214,7 @@ class ReplicaCache:
         stats = self._stats()
         _bump(stats, "writes")
         _bump(stats, "l1_to_l2")         # write-through: writes descend
+        self.shared.fabric.stats.bump("bytes_l1_l2", BLOCK_BYTES)
 
         def _installed(grant: LeaseGrant) -> None:
             lease = protocol.install(self.cts, grant.wts, grant.rts)

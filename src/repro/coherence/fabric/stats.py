@@ -35,6 +35,12 @@ class FabricStats:
     wb_evictions: int = 0     # always 0: the fabric is write-through
     inval_msgs: int = 0       # always 0: HALCONE sends no invalidations
     pcie_blocks: int = 0      # MM accesses routed to a non-home TSU shard
+    # Fig-10 per-link traffic (state.link_bytes shared with the simulator):
+    # inter-GPU bytes are pure data for this fabric — no invalidation
+    # component can ever be added (inval_msgs is 0 by construction).
+    bytes_l1_l2: int = 0      # replica<->shared link bytes
+    bytes_l2_mm: int = 0      # shared<->TSU/MM link bytes
+    bytes_inter_gpu: int = 0  # cross-shard (non-home TSU) link bytes
     # --- service extras ---
     write_throughs: int = 0   # queue drains that reached the fabric
     self_invalidations: int = 0  # expired lines dropped (coh_miss_l1 + l2)

@@ -22,6 +22,7 @@ import weakref
 from typing import Any, Dict, List, NamedTuple, Optional
 
 from repro.core import protocol
+from repro.core.state import BLOCK_BYTES
 from repro.coherence.fabric.stats import FabricStats
 
 
@@ -146,17 +147,21 @@ class TSUFabric:
     def read(self, key, home_shard: Optional[int] = None) -> Optional[LeaseGrant]:
         s = self.shard_of(key)
         self.stats.bump("l2_to_mm")
+        self.stats.bump("bytes_l2_mm", BLOCK_BYTES)
         if home_shard is not None and s != home_shard:
             self.stats.bump("pcie_blocks")
+            self.stats.bump("bytes_inter_gpu", BLOCK_BYTES)
         return self.shards[s].mm_read(key)
 
     def write(self, key, value, *, wr_lease: Optional[int] = None,
               home_shard: Optional[int] = None) -> LeaseGrant:
         s = self.shard_of(key)
         self.stats.bump("l2_to_mm")
+        self.stats.bump("bytes_l2_mm", BLOCK_BYTES)
         self.stats.bump("write_throughs")
         if home_shard is not None and s != home_shard:
             self.stats.bump("pcie_blocks")
+            self.stats.bump("bytes_inter_gpu", BLOCK_BYTES)
         return self.shards[s].mm_write(key, value, wr_lease)
 
     def memts(self, key) -> int:

@@ -6,10 +6,13 @@ The serving-side transfer of HALCONE (DESIGN.md §2a): prefill results
 messages when a prefix is republished (model refresh, upstream eviction).
 
 Since the array-native refactor (DESIGN.md §7) the production adapter is
-``BatchedKVLease``: a thin veneer over a ``FabricBackend`` — by default the
-jitted ``ArrayFabric`` — whose ``get_batch``/``put_batch`` issue ONE
-batched lease probe per decode batch instead of a Python call per key.
-``runtime/server.py`` and ``launch/serve.py`` speak only this API.
+``BatchedKVLease``: a thin veneer over a ``FabricBackend`` — by default
+``default_fabric()``, i.e. the mesh-placed ``ShardedArrayFabric`` whenever
+more than one device is visible (TSU shards execute grants on their owning
+devices, DESIGN.md §8), else the single-device ``ArrayFabric`` — whose
+``get_batch``/``put_batch`` issue ONE batched lease probe per decode batch
+instead of a Python call per key.  ``runtime/server.py`` and
+``launch/serve.py`` speak only this API.
 
 ``AuthoritativeStore`` / ``LeaseKVCache`` remain as the HOST-OBJECT
 adapters over the oracle fabric — kept because the differential parity
@@ -20,9 +23,9 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.coherence.fabric import (ArrayFabric, FabricBackend,
-                                    FabricConfig, ReplicaCache, SharedCache,
-                                    TSUFabric)
+from repro.coherence.fabric import (FabricBackend, FabricConfig,
+                                    ReplicaCache, SharedCache, TSUFabric,
+                                    default_fabric)
 
 
 class BatchedKVLease:
@@ -38,7 +41,7 @@ class BatchedKVLease:
 
     def __init__(self, backend: Optional[FabricBackend] = None,
                  replica: int = 0):
-        self.backend = backend if backend is not None else ArrayFabric(
+        self.backend = backend if backend is not None else default_fabric(
             FabricConfig())
         self.replica = replica
 

@@ -50,8 +50,8 @@ class LeaseClock:
     PARAM_KEY = "params"
 
     def __init__(self, fabric=None):
-        from repro.coherence.fabric import ArrayFabric, FabricConfig
-        self.fabric = fabric if fabric is not None else ArrayFabric(
+        from repro.coherence.fabric import FabricConfig, default_fabric
+        self.fabric = fabric if fabric is not None else default_fabric(
             FabricConfig(n_shards=1, max_in_flight=0))
 
     @property

@@ -83,7 +83,11 @@ class SimState(NamedTuple):
 
 COUNTERS = ("l1_to_l2", "l2_to_mm", "l1_hits", "l2_hits", "coh_miss_l1",
             "coh_miss_l2", "wb_evictions", "inval_msgs", "pcie_blocks",
-            "reads", "writes")
+            "reads", "writes",
+            # Fig-10 per-link traffic (state.link_bytes): data blocks are
+            # BLOCK_BYTES, invalidations CTRL_BYTES; HALCONE's inter-GPU
+            # bytes carry no invalidation component by construction.
+            "bytes_l1_l2", "bytes_l2_mm", "bytes_inter_gpu")
 
 
 def init_state(cfg: SystemConfig, n_addr: int) -> SimState:
@@ -488,6 +492,12 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         ctr["wb_evictions"] += f(dirty_evict) if wb else 0.0
         ctr["inval_msgs"] += inval_msgs if hmg else 0.0
         ctr["pcie_blocks"] += f(pcie_hop) if rdma else 0.0
+        b12, b2m, big = S.link_bytes(
+            f(need_l2), f(need_mm) + (f(dirty_evict) if wb else 0.0),
+            f(pcie_hop) if rdma else 0.0, inval_msgs if hmg else 0.0)
+        ctr["bytes_l1_l2"] += b12
+        ctr["bytes_l2_mm"] += b2m
+        ctr["bytes_inter_gpu"] += big
 
         new_st = SimState(
             l1=TierState(tag=l1_tag, wts=l1_wts, rts=l1_rts, ver=l1_ver,

@@ -40,6 +40,29 @@ from repro.kernels.lease_probe import lease_probe
 
 INVALID = jnp.int32(-1)
 
+# ------------------------------------------------------- link traffic (Fig 10)
+# Every hierarchy hop moves one data block; directory invalidations (HMG)
+# are control-sized messages.  These two constants + ``link_bytes`` are the
+# ONE definition of the paper's Fig-10 per-link traffic accounting: the
+# timing simulator (engine.COUNTERS) and the production fabric
+# (FabricStats) both report bytes through this helper, so a simulated
+# trace and a served trace decompose identically.
+BLOCK_BYTES = 64        # one cache block / KV line on any data link
+CTRL_BYTES = 8          # one invalidation / control message (HMG only)
+
+
+def link_bytes(l1_l2_msgs, l2_mm_msgs, inter_gpu_blocks, inval_msgs=0):
+    """Per-link byte counters (L1<->L2, L2<->MM, inter-GPU).
+
+    Works on python ints and on traced arrays alike.  HALCONE's headline
+    (Fig. 10): ``inval_msgs`` is 0 by construction, so its inter-GPU bytes
+    are pure data; HMG pays ``CTRL_BYTES`` per invalidation on the same
+    low-bandwidth links.
+    """
+    return (l1_l2_msgs * BLOCK_BYTES,
+            l2_mm_msgs * BLOCK_BYTES,
+            inter_gpu_blocks * BLOCK_BYTES + inval_msgs * CTRL_BYTES)
+
 
 # ----------------------------------------------------------------- states
 class TierState(NamedTuple):

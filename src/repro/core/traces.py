@@ -207,6 +207,15 @@ def standard_trace(cfg: SystemConfig, bench: BenchModel, rounds: int = 1536,
     Addresses: each GPU owns a private region sized by footprint share; a
     shared region (interleaved pages) receives `shared_frac` of accesses.
     Streaming = sequential block walk (stride 1) + `reuse` re-touches.
+
+    ``rw_share`` benchmarks (in-place frontier/matrix updates) additionally
+    target a small HOT slice at the base of the shared region with both a
+    slice of their shared reads and their in-place writes — the accesses
+    every GPU touches, i.e. the ones that actually exercise coherence
+    (directory invalidations under HMG, self-invalidation under HALCONE;
+    Fig 10).  With ``rw_share == 0`` — every STANDARD mix — the hot-slice
+    paths are never taken and draw nothing from the rng, so those traces
+    are bit-identical to the pre-hot-slice generator.
     """
     rng = np.random.default_rng(seed)
     NC, CU = cfg.n_cus, cfg.cus_per_gpu
@@ -252,8 +261,11 @@ def standard_trace(cfg: SystemConfig, bench: BenchModel, rounds: int = 1536,
             r = rng.random()
             if write and rng.random() < bench.rw_share:
                 # in-place update of shared read-write data (fws/bs-style):
-                # the accesses that actually need coherence
-                a = shared_base + pos_sh
+                # the accesses that actually need coherence.  Targets the
+                # hot slice every GPU reads (below), not this CU's private
+                # walk position — otherwise no other GPU ever shares the
+                # line and no protocol has anything to invalidate.
+                a = shared_base + int(rng.integers(0, 2 * PB))
             elif write:
                 # streaming kernels write each output once; output slices are
                 # DISJOINT per CU (standard C=A+B partitioning — no write
@@ -265,8 +277,14 @@ def standard_trace(cfg: SystemConfig, bench: BenchModel, rounds: int = 1536,
             elif r < bench.reuse:
                 a = recent[rng.integers(0, 8)]   # re-READ of an input
             elif r < bench.reuse + bench.shared_frac:
-                pos_sh = (pos_sh + 1) % shared_blocks
-                a = shared_base + pos_sh
+                # subdivide the already-drawn r: an rw_share-sized tail of
+                # the shared reads hits the hot in-place slice (empty when
+                # rw_share == 0 -> identical stream for streaming mixes)
+                if r >= bench.reuse + bench.shared_frac * (1 - bench.rw_share):
+                    a = shared_base + int(rng.integers(0, 2 * PB))
+                else:
+                    pos_sh = (pos_sh + 1) % shared_blocks
+                    a = shared_base + pos_sh
                 recent[t % 8] = a
             else:
                 pos = (pos + 1) % half

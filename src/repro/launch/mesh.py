@@ -21,3 +21,22 @@ def make_host_mesh():
     """Whatever this host has (CPU smoke tests / examples): 1 device mesh."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_fabric_mesh(n_shards=None, devices=None):
+    """The coherence fabric's 1-axis ``fabric`` mesh: TSU shard ``s`` lives
+    on device ``s // (n_shards / D)`` (the paper's one-TSU-per-HBM-stack
+    placement; see coherence/fabric/arrays.ShardedArrayFabric).
+
+    Uses the LARGEST device count that divides ``n_shards`` so every
+    device owns an equal contiguous run of shards; on a 1-device host this
+    degenerates to a single-device mesh (same shard_map entry point)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(devices) if devices is not None else list(jax.devices())
+    d = len(devs)
+    if n_shards is not None:
+        while d > 1 and n_shards % d:
+            d -= 1
+    return Mesh(np.array(devs[:d]), ("fabric",))

@@ -3,9 +3,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --requests 8
 
 The server obtains every prefix-KV lease from the array-native coherence
-fabric (``ArrayFabric``, --tsu-shards shards) via ONE batched probe per
-serve call — the same backend (and the same `core.state` transition rules)
-the trainer and benchmarks use.
+fabric (--tsu-shards TSU shards; mesh-placed on devices via
+``ShardedArrayFabric`` when more than one device is visible) via ONE
+batched probe per serve call — the same backend (and the same `core.state`
+transition rules) the trainer and benchmarks use.
 """
 import argparse
 import json
@@ -14,7 +15,7 @@ import jax
 import numpy as np
 
 from repro import configs as cfgs
-from repro.coherence.fabric import ArrayFabric, FabricConfig
+from repro.coherence.fabric import FabricConfig, default_fabric
 from repro.models import init_model
 from repro.runtime.server import Request, Server
 
@@ -33,9 +34,14 @@ def main():
 
     cfg = cfgs.SMOKE[args.arch]            # serving demo runs the smoke cfg
     params = init_model(cfg, jax.random.PRNGKey(0))
-    fabric = ArrayFabric(FabricConfig(n_shards=args.tsu_shards,
-                                      rd_lease=args.rd_lease,
-                                      wr_lease=args.wr_lease))
+    # mesh-placed TSU shards when this host has >1 device (DESIGN.md §8)
+    fabric = default_fabric(FabricConfig(n_shards=args.tsu_shards,
+                                         rd_lease=args.rd_lease,
+                                         wr_lease=args.wr_lease))
+    if getattr(fabric, "mesh", None) is not None:
+        print(f"fabric mesh: {fabric.mesh} "
+              f"({args.tsu_shards} shards on "
+              f"{fabric.mesh.devices.size} devices)")
     srv = Server(cfg, params, batch_size=args.batch,
                  max_len=args.prompt_len + args.max_new + 8, fabric=fabric)
     rng = np.random.default_rng(0)

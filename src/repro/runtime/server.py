@@ -8,8 +8,11 @@ all groups' prefix keys go through ``BatchedKVLease.get_batch`` (a single
 vectorized ``state.tier_probe`` on the steady state), the missing prefixes
 are prefilled once, and ONE ``put_batch`` posts their write-throughs.
 There is no per-key host-object path left: every lease comes from a
-``FabricBackend`` (default ``ArrayFabric``) — pass a shared backend to run
-many Server replicas against one sharded TSU service.
+``FabricBackend`` (default ``default_fabric()`` — the mesh-placed
+``ShardedArrayFabric`` whenever the process sees more than one device, so
+TSU shards execute grants on their owning devices and cross-shard traffic
+is real collective hops) — pass a shared backend to run many Server
+replicas against one sharded TSU service.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.coherence.fabric import ArrayFabric, FabricBackend, FabricConfig
+from repro.coherence.fabric import FabricBackend, FabricConfig, default_fabric
 from repro.coherence.kv_lease import BatchedKVLease
 from repro.models import decode_step, init_cache, prefill
 from repro.sharding import NOSHARD
@@ -44,7 +47,7 @@ class Server:
                  fabric: Optional[FabricBackend] = None, replica: int = 0):
         self.cfg, self.params = cfg, params
         self.B, self.max_len = batch_size, max_len
-        self.fabric = fabric if fabric is not None else ArrayFabric(
+        self.fabric = fabric if fabric is not None else default_fabric(
             FabricConfig())
         self.kv = BatchedKVLease(self.fabric, replica=replica)
         self._prefill = jax.jit(

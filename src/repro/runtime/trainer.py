@@ -19,7 +19,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.coherence.fabric import ArrayFabric, FabricBackend, FabricConfig
+from repro.coherence.fabric import (FabricBackend, FabricConfig,
+                                    default_fabric)
 from repro.coherence.lease_sync import LeaseClock
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.steps import make_train_step
@@ -51,7 +52,7 @@ class Trainer:
         # every checkpoint publish is a parameter write-through on the
         # coherence fabric (array backend): eval readers hold the previous
         # version on a ckpt_period-step lease instead of being invalidated.
-        self.fabric = fabric if fabric is not None else ArrayFabric(
+        self.fabric = fabric if fabric is not None else default_fabric(
             FabricConfig(n_shards=1, max_in_flight=0))
         self.param_clock = LeaseClock(fabric=self.fabric)
         self.events: List[Dict] = []

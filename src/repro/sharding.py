@@ -31,6 +31,8 @@ DEFAULT_RULES: dict = {
     "kv_seq": ("data",),           # long-context decode: shard KV length
     "dstate": (),
     "stack": (),                   # scanned layer dim — never sharded
+    "fabric_shard": ("fabric",),   # TSU shard-major dims of the coherence
+                                   # fabric (launch.mesh.make_fabric_mesh)
     None: (),
 }
 

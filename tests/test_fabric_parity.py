@@ -1,21 +1,35 @@
 """Backend-parity suite: the array-native fabric is BIT-IDENTICAL to the
-host-object fabric (DESIGN.md §7).
+host-object fabric (DESIGN.md §7), and the mesh-sharded fabric to both
+(DESIGN.md §8).
 
 Randomized op traces (reads/writes/fences/authority ops across replicas,
 including forced 16-bit overflow reinits and TSU victim evictions) are
 applied to both ``FabricBackend`` implementations; every observable must
 match exactly: per-op results (values + versions), the ordered MM grant
-log (wts/rts/version), the full FabricStats block, each replica's mirror
-counters, and the per-key ``memts`` clocks.  A hypothesis layer fuzzes the
-same property when hypothesis is installed (CI does; the ``[test]``
-extra pulls it in).
+log (wts/rts/version), the full FabricStats block (including the Fig-10
+per-link byte counters), each replica's mirror counters, and the per-key
+``memts`` clocks.  A hypothesis layer fuzzes the same property when
+hypothesis is installed (CI does; the ``[test]`` extra pulls it in).
+
+``ShardedArrayFabric`` runs the same suite on a REAL multi-device mesh:
+the ``test_sharded_parity_forced_8_devices`` harness re-launches this
+module's ``_sharded_multidevice_check`` in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or runs it
+in-process when the session already has 8+ devices, as CI's forced-mesh
+job does), pinning sharded-vs-host AND sharded-vs-single-device equality
+with one TSU shard per device and grants travelling over collectives.
 """
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
 from repro.coherence.fabric import (ArrayFabric, FabricConfig, HostFabric,
-                                    Op)
+                                    Op, ShardedArrayFabric)
 from repro.core import protocol
+from repro.core.state import BLOCK_BYTES
 
 # one small geometry reused everywhere so the jitted op-scan compiles once
 SMALL = dict(n_shards=2, rd_lease=8, wr_lease=4, tsu_capacity=4,
@@ -129,6 +143,137 @@ def test_fast_path_equals_scan_path_on_all_hit_batch():
     for x, y in zip(jax.tree_util.tree_leaves(a1._af),
                     jax.tree_util.tree_leaves(a2._af)):
         assert (np.asarray(x) == np.asarray(y)).all()
+
+
+# ------------------------------------------------------- sharded fabric
+def test_sharded_fabric_parity_on_host_mesh():
+    """ShardedArrayFabric is a FabricBackend and bit-identical to the host
+    oracle through the shard_map entry point on whatever mesh this host
+    has (1 device here; the 8-device variant runs in a subprocess)."""
+    cfg = FabricConfig(**SMALL)
+    host = HostFabric(cfg, n_nodes=2, replicas_per_node=2)
+    sh = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    assert cfg.n_shards % sh.n_shard_devices == 0
+    ops = random_trace(np.random.default_rng(3), 200, 4)
+    assert_equivalent(host, sh, ops)
+
+
+def test_sharded_rejects_indivisible_mesh():
+    from repro.launch.mesh import make_fabric_mesh
+    mesh = make_fabric_mesh()                      # all devices, 1 axis
+    if int(mesh.devices.size) == 1:
+        pytest.skip("single-device mesh divides everything")
+    with pytest.raises(ValueError, match="divisible"):
+        ShardedArrayFabric(FabricConfig(
+            n_shards=int(mesh.devices.size) + 1, tsu_capacity=4), mesh=mesh)
+
+
+def _keys_by_shard(cfg, want, prefix="t"):
+    """First key hashing to each wanted shard (stable_hash routing)."""
+    from repro.coherence.fabric import stable_hash
+    out = {}
+    i = 0
+    while len(out) < len(want):
+        k = f"{prefix}{i}"
+        s = stable_hash(k) % cfg.n_shards
+        if s in want and s not in out:
+            out[s] = k
+        i += 1
+    return out
+
+
+def test_cross_shard_reads_count_inter_gpu_bytes():
+    """The Fig-10 pin: an MM access routed to a NON-home TSU shard moves
+    BLOCK_BYTES over the inter-GPU link; a home-shard access moves none —
+    and both backends account it identically."""
+    cfg = FabricConfig(n_shards=2, tsu_capacity=8)
+    by_shard = _keys_by_shard(cfg, {0, 1})
+    for fab in (HostFabric(cfg, n_nodes=1, replicas_per_node=1),
+                ArrayFabric(cfg, n_nodes=1, replicas_per_node=1)):
+        # node 0's home shard is 0 (node_id % n_shards)
+        fab.mm_write(by_shard[0], "local")         # authority preload
+        fab.mm_write(by_shard[1], "remote")
+        base = fab.stats()["bytes_inter_gpu"]
+        assert fab.read(by_shard[0], replica=0) is not None
+        assert fab.stats()["bytes_inter_gpu"] == base, \
+            "shard-local read must not touch the inter-GPU link"
+        assert fab.read(by_shard[1], replica=0) is not None
+        assert fab.stats()["bytes_inter_gpu"] == base + BLOCK_BYTES, \
+            "cross-shard read must move exactly one block inter-GPU"
+        st = fab.stats()
+        assert st["bytes_l1_l2"] == st["l1_to_l2"] * BLOCK_BYTES
+        assert st["bytes_l2_mm"] == st["l2_to_mm"] * BLOCK_BYTES
+        assert st["bytes_inter_gpu"] == st["pcie_blocks"] * BLOCK_BYTES
+        assert st["inval_msgs"] == 0               # the paper's claim
+
+
+def _sharded_multidevice_check():
+    """Body of the forced-8-device parity check (run in-process when the
+    session already has >= 8 devices, else via the subprocess harness):
+    ShardedArrayFabric-vs-HostFabric and sharded-vs-single-device equality
+    — results, grant log, stats incl. traffic counters, replica mirrors —
+    with one TSU shard per device, plus the overflow/eviction config."""
+    import jax
+
+    assert len(jax.devices()) >= 8, "needs the forced 8-device host mesh"
+    cfg_kw = dict(SMALL, n_shards=8)
+    cfg = FabricConfig(**cfg_kw)
+    host = HostFabric(cfg, n_nodes=2, replicas_per_node=2)
+    sh = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    assert sh.n_shard_devices == 8                 # one shard per device
+    ops = random_trace(np.random.default_rng(11), 220, 4)
+    assert_equivalent(host, sh, ops)
+
+    arr = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    arr.apply(ops)
+    batch = [KEYS[i % len(KEYS)] for i in range(24)] + ["missing-key"]
+    assert sh.read_batch(batch, replica=1) == arr.read_batch(batch,
+                                                             replica=1)
+    assert sh.stats() == arr.stats()
+    assert list(sh.grant_log) == list(arr.grant_log)
+    for r in range(sh.n_replicas):
+        assert sh.replica_stats(r) == arr.replica_stats(r)
+    assert sh.stats()["bytes_inter_gpu"] > 0       # the mesh saw real hops
+
+    # overflow reinits + TSU victim evictions through the sharded path
+    ocfg = dict(OVERFLOW, n_shards=2)
+    host2 = HostFabric(FabricConfig(**ocfg), n_nodes=1, replicas_per_node=2)
+    sh2 = ShardedArrayFabric(FabricConfig(**ocfg), n_nodes=1,
+                             replicas_per_node=2)
+    assert sh2.n_shard_devices == 2
+    ops2 = random_trace(np.random.default_rng(12), 150, 2,
+                        wr_choices=(None, 1, 30000), n_nodes=1)
+    assert_equivalent(host2, sh2, ops2)
+    assert host2.stats()["overflow_reinits"] > 0
+    return True
+
+
+def test_sharded_parity_forced_8_devices():
+    """Run ``_sharded_multidevice_check`` on an 8-device host mesh: in
+    process if this session was launched with the forced flag (CI), else
+    in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    import jax
+
+    if len(jax.devices()) >= 8:
+        assert _sharded_multidevice_check()
+        return
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), os.path.join(repo, "tests")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "from test_fabric_parity import _sharded_multidevice_check; "
+         "assert _sharded_multidevice_check(); print('SHARDED-PARITY-OK')"],
+        env=env, cwd=repo, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"forced-8-device parity subprocess failed:\n--- stdout ---\n"
+        f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "SHARDED-PARITY-OK" in proc.stdout
 
 
 def test_single_transition_layer():

@@ -96,6 +96,27 @@ def test_pack_batch_padding_is_exact():
                                    float(b["counters"][k]), atol=1e-3)
 
 
+def test_fig10_byte_counters_decompose(batch):
+    """The per-link byte counters are exactly state.link_bytes over the
+    transaction counters — and HALCONE's inter-GPU bytes never contain an
+    invalidation component (inval_msgs == 0, the Fig-10 claim)."""
+    from repro.core.state import BLOCK_BYTES, CTRL_BYTES
+
+    tl, _ = batch
+    for cfg in (sm_wt_halcone(**KW), rdma_wb_hmg(**KW)):
+        c = {k: float(v)
+             for k, v in simulate(cfg, *tl[1])["counters"].items()}
+        np.testing.assert_allclose(c["bytes_l1_l2"],
+                                   c["l1_to_l2"] * BLOCK_BYTES)
+        np.testing.assert_allclose(c["bytes_l2_mm"],
+                                   c["l2_to_mm"] * BLOCK_BYTES)
+        np.testing.assert_allclose(
+            c["bytes_inter_gpu"],
+            c["pcie_blocks"] * BLOCK_BYTES + c["inval_msgs"] * CTRL_BYTES)
+        if cfg.protocol == "halcone":
+            assert c["inval_msgs"] == 0.0
+
+
 def test_stack_configs_rejects_mixed_structure():
     with pytest.raises(ValueError):
         stack_configs([sm_wt_halcone(**KW), sm_wt_nc(**KW)])
