@@ -51,6 +51,13 @@ def _fingerprint(fn: Callable, script: Optional[str] = None) -> str:
         for pkg in (repro.core, repro.kernels, repro.coherence.fabric):
             paths.extend(sorted(pathlib.Path(pkg.__file__).parent
                                 .glob("*.py")))
+        # the coherence package itself is a namespace package (no
+        # __init__), so walk up from fabric/ for the serving adapters
+        # (kv_lease/lease_sync) — a batched-contract change must
+        # invalidate cached fabric rows too.  This also covers the new
+        # state-layer module fabric/pipeline.py via the glob above.
+        paths.extend(sorted(pathlib.Path(repro.coherence.fabric.__file__)
+                            .parent.parent.glob("*.py")))
         # mesh-layout sources: a fabric/sharding rule change must
         # invalidate cached artifacts too
         paths.append(pathlib.Path(repro.sharding.__file__))

@@ -23,13 +23,23 @@ plus the array-native headline (DESIGN.md §7):
                     are bit-identical (tests/test_fabric_parity.py); this
                     row is the wall-clock payoff.
 
-  sharded_serving — the mesh-placed fabric (DESIGN.md §8): identical mixed
-                    read/republish streams through the 1-device ArrayFabric
-                    and the ShardedArrayFabric on every visible device (8
-                    under CI's forced host mesh), with the Fig-10 traffic
-                    split the sharded run measured.  BENCH_fabric.json's
+  sharded_serving — the mesh-placed fabric (DESIGN.md §8) on a MISS-HEAVY
+                    stream: the batched grant pipeline (ONE packed
+                    collective per batch, DESIGN.md §9) vs the per-op
+                    collective scan schedule on identical streams across
+                    every visible device (8 under CI's forced host mesh),
+                    with the Fig-10 traffic split.  BENCH_fabric.json's
                     ``_meta`` records shard count, device kind, git SHA and
                     jax version so the trajectory is comparable across PRs.
+
+  scan_path       — us/op of the exact op-scan vs the batched pipeline on
+                    identical miss-heavy read batches (ROADMAP scan-path
+                    item), single device.
+
+  batched_grants  — structural per-batch collective counts from the
+                    compiled jaxpr: O(1) for the batched pipeline vs
+                    O(batch) for the scan schedule (the acceptance pin,
+                    as a recorded number).
 
 Results land in benchmarks/artifacts AND a root-level ``BENCH_fabric.json``
 (the repo's perf trajectory file: batched vs host ops/sec + sweep wall).
@@ -188,52 +198,161 @@ def scenario_batched_serving(ops: int = 16384, n_hot: int = 1024,
     }
 
 
+def _miss_heavy_batches(hot, batch, n_batches, seed=0):
+    """Deduplicated (serving-style) batches over the hot set: each batch
+    is a permutation slice, so the miss pass runs conflict-light rounds."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        perm = rng.permutation(len(hot))
+        out.append([hot[i] for i in perm[:batch]])
+    return out
+
+
+def _drive_miss_heavy(backend, batches, hot, reader=1, writer=0,
+                      republish=16):
+    """The miss-heavy steady state: every read batch is preceded by a
+    republish slice + fence, so the reader's leases are expired and the
+    whole batch descends to the TSU (phase 2 of the batched read).
+    Returns per-batch wall seconds — callers report the MEDIAN so a
+    stray mid-loop XLA recompile (pow2 shape churn) or scheduler hiccup
+    cannot masquerade as steady-state cost."""
+    walls = []
+    for t, ks in enumerate(batches):
+        t0 = time.time()
+        sl = [hot[(t * republish + j) % len(hot)] for j in range(republish)]
+        backend.write_batch([(k, f"v@{t}") for k in sl], replica=writer)
+        backend.fence()
+        backend.read_batch(ks, replica=reader)
+        walls.append(time.time() - t0)
+    return walls
+
+
+def scenario_scan_path(ops: int = 8192, n_hot: int = 512,
+                       batch: int = 256) -> dict:
+    """The scan-path microbench (ROADMAP item): us/op of the exact op-scan
+    (``pipeline="scan"`` serves every miss one scan step at a time)
+    against the batched grant pipeline (``pipeline="batched"`` serves the
+    whole miss subset in a few vectorized rounds) on IDENTICAL miss-heavy
+    read streams.  Stats equality is asserted — the two pipelines are the
+    same protocol, only the execution schedule differs."""
+    cfg = FabricConfig(n_shards=4, rd_lease=8, wr_lease=4,
+                       replica_sets=1024, replica_ways=8,
+                       shared_sets=2048, shared_ways=8)
+    hot = [f"prefix/{i}" for i in range(n_hot)]
+    n_batches = max(4, ops // batch)
+    batches = _miss_heavy_batches(hot, batch, n_batches)
+
+    def bench(pipe):
+        fab = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                          pipeline=pipe)
+        fab.write_batch([(k, f"{k}@0") for k in hot], replica=0)
+        fab.fence()
+        fab.read_batch(hot, replica=1)               # fill + compile
+        # two warm batches: the first sees a cold all-miss subset, the
+        # second lands on the steady-state miss shapes the timed loop runs
+        _drive_miss_heavy(fab, batches[:2], hot)
+        walls = _drive_miss_heavy(fab, batches[2:], hot)
+        return fab, float(np.median(walls))
+
+    scan_fab, scan_s = bench("scan")
+    batched_fab, batched_s = bench("batched")
+    assert scan_fab.stats() == batched_fab.stats(), \
+        "batched pipeline diverged from the op-scan"
+    st = scan_fab.stats()
+    miss_rate = (st["l1_to_l2"] - st["writes"]) / max(st["reads"], 1)
+    return {
+        "ops": (n_batches - 2) * batch, "batch": batch, "n_hot": n_hot,
+        "miss_rate": round(miss_rate, 3),
+        "scan_us_per_op": round(scan_s / batch * 1e6, 2),
+        "batched_us_per_op": round(batched_s / batch * 1e6, 2),
+        "batched_speedup": round(scan_s / batched_s, 2),
+    }
+
+
+def scenario_batched_grants(n_shards: int = 8, batch: int = 512) -> dict:
+    """Structural collective accounting for the sharded fabric (the
+    acceptance pin, measured): how many cross-shard collectives one
+    batch of ``batch`` ops issues under each pipeline, counted in the
+    compiled jaxpr (a collective inside the scan body executes once per
+    op).  The batched grant pipeline is O(1) per batch; the per-op scan
+    schedule is O(batch)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.coherence.fabric.pipeline import collective_counts
+
+    cfg = FabricConfig(n_shards=n_shards, rd_lease=8, wr_lease=4)
+    xs = {k: jnp.zeros((batch,), jnp.int32) for k in
+          ("kind", "rep", "node", "key", "set1", "set2", "shard", "wl")}
+    out = {"batch": batch, "n_shards": n_shards}
+    for pipe in ("batched", "scan"):
+        fab = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                                 pipeline=pipe)
+        c = collective_counts(jax.make_jaxpr(fab._run)(
+            fab._af, xs, jnp.int32(8), jnp.int32(4)))
+        out[pipe] = {
+            "collectives_traced": c["total"],
+            "in_scan_body": c["in_loop"],
+            "collectives_per_batch": (c["total"] - c["in_loop"]
+                                      + c["in_loop"] * batch),
+        }
+        out["devices"] = fab.n_shard_devices
+    return out
+
+
 def scenario_sharded_serving(ops: int = 8192, n_hot: int = 256,
                              batch: int = 1024, n_shards: int = 8) -> dict:
-    """Mesh-placed vs single-device fabric on IDENTICAL op streams
-    (mixed leased reads + periodic republish, so the TSU path and its
-    cross-shard collective hops actually run): 1-device ``ArrayFabric``
-    against ``ShardedArrayFabric`` on however many devices this process
-    sees (8 under CI's forced host mesh).  Both are bit-identical by the
-    parity contract; the row records the wall-clock of shard-local grant
-    execution plus the Fig-10 traffic split the sharded run measured."""
+    """The mesh-placed fabric on a MISS-HEAVY serving stream (every read
+    batch preceded by a republish + fence, so the whole batch descends to
+    the sharded TSU): the batched grant pipeline (ONE packed collective
+    per batch) against the ``pipeline="scan"`` per-op collective schedule
+    on IDENTICAL streams, with the 1-device ``ArrayFabric`` as the
+    bit-identity reference.  ``batched_over_scan`` is the acceptance
+    headline — what batching the cross-shard grant exchange buys on
+    however many devices this process sees (8 under CI's forced host
+    mesh) — plus the Fig-10 traffic split the sharded run measured."""
     import jax
 
     cfg = FabricConfig(n_shards=n_shards, rd_lease=8, wr_lease=4,
-                       replica_sets=256, replica_ways=8,
-                       shared_sets=512, shared_ways=8)
+                       replica_sets=1024, replica_ways=8,
+                       shared_sets=2048, shared_ways=8)
     hot = [f"prefix/{i}" for i in range(n_hot)]
-    rng = np.random.default_rng(0)
-    n_batches = max(2, ops // batch)
-    batches = [[hot[i] for i in rng.integers(0, n_hot, batch)]
-               for _ in range(n_batches)]
+    n_batches = max(4, ops // batch)
+    batches = _miss_heavy_batches(hot, min(batch, n_hot), n_batches)
 
     def drive(backend):
         backend.write_batch([(k, f"{k}@0") for k in hot], replica=0)
         backend.fence()
         backend.read_batch(hot, replica=1)           # fill replica tier
-        backend.read_batch(batches[0], replica=1)    # compile bench shape
-        t0 = time.time()
-        for t, ks in enumerate(batches):
-            backend.read_batch(ks, replica=1)
-            if t % 4 == 3:       # republish: lease expiry + TSU round trip
-                backend.write(hot[t % n_hot], f"v@{t}", replica=0)
-        return time.time() - t0
+        # two warm batches: cold all-miss shapes, then the steady-state
+        # miss shapes the timed loop actually runs; report the MEDIAN
+        # per-batch wall so a stray recompile can't skew the row
+        _drive_miss_heavy(backend, batches[:2], hot)
+        return float(np.median(_drive_miss_heavy(backend, batches[2:],
+                                                 hot)))
 
     single = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
-    sharded = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    batched = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                                 pipeline="batched")
+    scan = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                              pipeline="scan")
     single_s = drive(single)
-    sharded_s = drive(sharded)
-    assert single.stats() == sharded.stats(), \
-        "sharded serving diverged from the single-device fabric"
-    st = sharded.stats()
-    n = n_batches * batch
+    batched_s = drive(batched)
+    scan_s = drive(scan)
+    assert single.stats() == batched.stats() == scan.stats(), \
+        "sharded serving diverged across pipelines"
+    st = batched.stats()
+    b = min(batch, n_hot)
     return {
-        "ops": n, "batch": batch, "n_hot": n_hot, "n_shards": n_shards,
-        "shard_devices": sharded.n_shard_devices,
-        "single_ops_per_sec": round(n / single_s, 1),
-        "sharded_ops_per_sec": round(n / sharded_s, 1),
-        "sharded_over_single": round(single_s / sharded_s, 3),
+        "ops": (n_batches - 2) * b, "batch": b, "n_hot": n_hot,
+        "n_shards": n_shards,
+        "shard_devices": batched.n_shard_devices,
+        "single_ops_per_sec": round(b / single_s, 1),
+        "sharded_ops_per_sec": round(b / batched_s, 1),
+        "sharded_scan_ops_per_sec": round(b / scan_s, 1),
+        "batched_over_scan": round(scan_s / batched_s, 3),
+        "sharded_over_single": round(single_s / batched_s, 3),
         "bytes_inter_gpu": st["bytes_inter_gpu"],
         "bytes_l2_mm": st["bytes_l2_mm"],
         "bytes_l1_l2": st["bytes_l1_l2"],
@@ -275,19 +394,25 @@ def _bench_meta(sharded: dict) -> dict:
     }
 
 
-def write_bench_json(sweep_wall_s: float, serving: dict,
-                     sharded: dict) -> None:
+def write_bench_json(sweep_wall_s: float, serving: dict, sharded: dict,
+                     scan_path: dict = None, grants: dict = None) -> None:
     """Root-level perf-trajectory artifact (ISSUE 3 satellite): the
     batched-vs-host ops/sec headline, the sharded-serving row (ISSUE 4),
-    and the lease-sweep wall-clock."""
-    BENCH_PATH.write_text(json.dumps({
+    the scan-vs-batched-pipeline row + per-batch collective counts
+    (ISSUE 5), and the lease-sweep wall-clock."""
+    blob = {
         "batched_serving": serving,
         "sharded_serving": sharded,
         "lease_sweep": {"wall_s": round(sweep_wall_s, 2),
                         "scenarios": list(SCENARIOS),
                         "lease_grid": LEASE_GRID},
         "_meta": _bench_meta(sharded),
-    }, indent=1))
+    }
+    if scan_path is not None:
+        blob["scan_path"] = scan_path
+    if grants is not None:
+        blob["batched_grants"] = grants
+    BENCH_PATH.write_text(json.dumps(blob, indent=1))
     print(f"wrote {BENCH_PATH}", file=sys.stderr)
 
 
@@ -315,6 +440,11 @@ def run(force: bool = False, mini: bool = False) -> None:
         out["_sharded_serving"] = scenario_sharded_serving(
             ops=2048 if mini else 8192, n_hot=128 if mini else 256,
             batch=512 if mini else 1024)
+        out["_scan_path"] = scenario_scan_path(
+            ops=2048 if mini else 8192, n_hot=256 if mini else 512,
+            batch=128 if mini else 256)
+        out["_batched_grants"] = scenario_batched_grants(
+            batch=128 if mini else 512)
         return out
 
     # distinct cache names: mini and full runs must never serve each
@@ -338,9 +468,19 @@ def run(force: bool = False, mini: bool = False) -> None:
     common.emit("fabric/sharded_serving", 1e6 / shd["sharded_ops_per_sec"],
                 f"devices={shd['shard_devices']};"
                 f"shards={shd['n_shards']};"
-                f"vs_single={shd['sharded_over_single']}x;"
+                f"batched_over_scan={shd['batched_over_scan']}x;"
                 f"inter_gpu_bytes={shd['bytes_inter_gpu']}")
-    write_bench_json(out["_sweep_wall_s"], srv, shd)
+    scp = out["_scan_path"]
+    common.emit("fabric/scan_path", scp["scan_us_per_op"],
+                f"batched_us={scp['batched_us_per_op']};"
+                f"speedup={scp['batched_speedup']}x;"
+                f"miss_rate={scp['miss_rate']}")
+    grt = out["_batched_grants"]
+    common.emit("fabric/batched_grants", 0.0,
+                f"batched_per_batch="
+                f"{grt['batched']['collectives_per_batch']};"
+                f"scan_per_batch={grt['scan']['collectives_per_batch']}")
+    write_bench_json(out["_sweep_wall_s"], srv, shd, scp, grt)
 
 
 def merge_sharded_row(ops: int) -> None:
@@ -361,8 +501,9 @@ def merge_sharded_row(ops: int) -> None:
     meta["fabric_shard_devices"] = shd["shard_devices"]
     BENCH_PATH.write_text(json.dumps(blob, indent=1))
     print(f"sharded_serving {shd['sharded_ops_per_sec']:,.0f} ops/s on "
-          f"{shd['shard_devices']} device(s); merged into {BENCH_PATH}",
-          flush=True)
+          f"{shd['shard_devices']} device(s) "
+          f"(batched_over_scan {shd['batched_over_scan']}x); "
+          f"merged into {BENCH_PATH}", flush=True)
 
 
 def main():
@@ -406,9 +547,20 @@ def main():
         out["sharded_serving"] = shd
         print(f"sharded_serving {shd['sharded_ops_per_sec']:,.0f} ops/s on "
               f"{shd['shard_devices']} device(s) "
-              f"(vs single-device {shd['single_ops_per_sec']:,.0f}; "
+              f"(batched_over_scan {shd['batched_over_scan']}x; "
               f"inter_gpu_bytes={shd['bytes_inter_gpu']})", flush=True)
-        write_bench_json(sweep_wall, srv, shd)
+        scp = scenario_scan_path(ops=max(2048, min(args.ops * 2, 8192)))
+        out["scan_path"] = scp
+        print(f"scan_path scan={scp['scan_us_per_op']}us/op "
+              f"batched={scp['batched_us_per_op']}us/op "
+              f"({scp['batched_speedup']}x, miss_rate={scp['miss_rate']})",
+              flush=True)
+        grt = scenario_batched_grants()
+        out["batched_grants"] = grt
+        print(f"batched_grants per-batch collectives: "
+              f"batched={grt['batched']['collectives_per_batch']} "
+              f"scan={grt['scan']['collectives_per_batch']}", flush=True)
+        write_bench_json(sweep_wall, srv, shd, scp, grt)
     out["_meta"] = {"ops": args.ops, "lease_grid": LEASE_GRID,
                     "wall_s": round(time.time() - t0, 2)}
     args.json.parent.mkdir(parents=True, exist_ok=True)

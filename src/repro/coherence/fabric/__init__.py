@@ -8,6 +8,10 @@ Layout (DESIGN.md §3, §7):
                ShardedArrayFabric: the same scan as a shard_map body with
                TSU shards placed along the "fabric" mesh axis (DESIGN.md
                §8); default_fabric(): picks between them by device count
+  pipeline.py— the batched grant pipeline (DESIGN.md §9): the vectorized
+               read_batch miss pass (conflict-free rounds over
+               state.tsu_lease_batch), plus the jaxpr collective counter
+               the O(1)-collectives-per-batch pin is built on
   tsu.py     — TSUShard / TSUFabric: the host MM+TSU authority
   cache.py   — ReplicaCache over SharedCache: the host L1-over-L2 tiers
   writeq.py  — WriteQueue: bounded posted write-throughs + fence

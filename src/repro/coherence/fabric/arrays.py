@@ -39,8 +39,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.coherence.fabric import pipeline as P_
 from repro.coherence.fabric.backend import (GRANT_LOG_LEN, FabricBackend,
                                             Op, _bounded)
+from repro.coherence.fabric.stats import GI as _GI
+from repro.coherence.fabric.stats import G_KEYS as _G_KEYS
+from repro.coherence.fabric.stats import RI as _RI
+from repro.coherence.fabric.stats import R_KEYS as _R_KEYS
 from repro.coherence.fabric.tsu import FabricConfig, stable_hash
 from repro.core import protocol
 from repro.core import state as S
@@ -52,21 +57,16 @@ _PRUNE_EVERY = 4096          # payload-map GC cadence, in completed writes
 _KIND = {"read": _READ, "write": _WRITE, "fence": _FENCE,
          "mm_write": _MM_WRITE, "publish": _PUBLISH, "mm_read": _MM_READ}
 
-# global counters (the FabricStats names this backend can ever bump);
-# wb_evictions / inval_msgs are 0 by construction, as the paper claims.
-# The bytes_* triple is the Fig-10 per-link traffic (state.link_bytes),
-# counted at the same transitions the host objects count it.
-_G_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2", "l2_to_mm",
-           "coh_miss_l1", "coh_miss_l2", "pcie_blocks", "write_throughs",
-           "self_invalidations", "compulsory", "refetches",
-           "capacity_evictions", "tsu_evictions", "overflow_reinits",
-           "fences", "bytes_l1_l2", "bytes_l2_mm", "bytes_inter_gpu")
-# the per-replica mirror subset (host ReplicaCache.stats semantics)
-_R_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2",
-           "coh_miss_l1", "coh_miss_l2", "self_invalidations", "compulsory",
-           "refetches", "capacity_evictions", "write_throughs")
-_GI = {k: i for i, k in enumerate(_G_KEYS)}
-_RI = {k: i for i, k in enumerate(_R_KEYS)}
+# pipelines: "batched" = one packed grant collective per batch + the
+# vectorized miss pass; "scan" = the PR-4 per-op collective schedule,
+# kept for ordering-sensitive debugging (DESIGN.md §9)
+PIPELINES = ("batched", "scan")
+# read_batch falls back to the op-scan when the miss subset needs more
+# conflict-free rounds than max(_MIN_ROUND_BUDGET, m // 4): one pass round
+# costs a few scan steps of dispatch, so the pipeline stops paying off
+# when conflicts (duplicate keys / set collisions) shred the subset into
+# near-sequential rounds.  A deduplicated serving batch is 1-2 rounds.
+_MIN_ROUND_BUDGET = 6
 
 
 class _AF(NamedTuple):
@@ -98,6 +98,36 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _shard_exchange(inner, KS: int, D: int):
+    """The batched grant pipeline's per-batch shard exchange, as a wrapper
+    for any ``inner(af_full, *args) -> (af_full, res)`` shard_map body:
+    assemble the full shard-major TSU buffer on every device with ONE
+    packed ``state.owner_gather`` (the batch's single collective), run
+    ``inner`` against it collective-free, and keep back only this
+    device's owned rows (``state.owner_take``).  Used by both the batched
+    op-scan and the vectorized miss pass so the packed-TSU layout has
+    exactly one exchange implementation."""
+    i32 = jnp.int32
+    SPD = KS // D
+
+    def pack(af):
+        return S.pack_tsu(af.tsu, af.tsu_ver, af.tsu_gseq, af.tsu_seq,
+                          af.tsu_nseq)
+
+    def put(af, parts):
+        tsu, ver, gseq, seq, nseq = parts
+        return af._replace(tsu=tsu, tsu_ver=ver, tsu_gseq=gseq,
+                           tsu_seq=seq, tsu_nseq=nseq)
+
+    def body(af, *args):
+        me = jax.lax.axis_index("fabric").astype(i32)
+        af2, res = inner(put(af, S.unpack_tsu(
+            S.owner_gather(pack(af), "fabric"))), *args)
+        return put(af2, S.unpack_tsu(S.owner_take(pack(af2), me, SPD))), res
+
+    return body
+
+
 def _af_pspecs() -> _AF:
     """The fabric state's mesh layout as a ``PartitionSpec`` prefix tree:
     the TSU table and its per-shard sequencers (version / gseq / alloc-seq
@@ -112,7 +142,8 @@ def _af_pspecs() -> _AF:
 
 
 @functools.lru_cache(maxsize=32)
-def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None):
+def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None,
+               PIPE="batched"):
     """The jitted op-scan for one static geometry.  Cached so every
     ArrayFabric instance with the same shape shares one compilation.
 
@@ -120,15 +151,28 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None):
     ``repro.sharding.shard_map`` body: the TSU table and its per-shard
     sequencers are laid out along the mesh axis (each device owns
     ``KS / D`` contiguous shards — the paper's one-TSU-per-HBM-stack
-    placement), every op's TSU transition executes ONLY on its key's
-    owning device, and the grant (wts/rts/version + counter flags) is the
-    one thing that travels — an ``all_gather`` over the fabric axis, the
-    measured inter-GPU hop.  Client tiers, write-queue rings and counters
-    stay replicated: they are updated by identical arithmetic on every
-    device (all op inputs and broadcast grants are replicated), so the
-    sharded scan is bit-identical to the single-device one.  The rare-op
-    ``lax.cond`` gates of the single-device path are replaced by masked
-    execution so each device runs the same symmetric collective sequence.
+    placement).  Client tiers, write-queue rings and counters stay
+    replicated: they are updated by identical arithmetic on every device
+    (all op inputs and exchanged grants are replicated), so the sharded
+    scan is bit-identical to the single-device one.  What travels over
+    the fabric axis depends on ``PIPE`` (DESIGN.md §9):
+
+      * ``"scan"``   — the PR-4 schedule: every op's TSU transition
+        executes only on its key's owning device and the packed grant
+        (wts/rts/version + counter flags) hops back as ONE ``all_gather``
+        per scan step — O(ops) collectives per batch.  The rare-op
+        ``lax.cond`` gates are replaced by masked execution so each
+        device runs the same symmetric collective sequence.  Kept for
+        ordering-sensitive debugging.
+      * ``"batched"`` — the batched grant pipeline: each device's owned
+        TSU rows (tag/memts/ver/gseq/seq/nseq packed into ONE contiguous
+        buffer, ``state.pack_tsu``) are exchanged ONCE per batch
+        (``state.owner_gather``), the whole scan then runs collective-free
+        against the assembled table on every device — identical replicated
+        arithmetic, so each device computes exactly the grants the owners
+        would have granted — and each device keeps only its own rows back
+        (``state.owner_take``).  O(1) collectives per batch, and the
+        single-device ``lax.cond`` gating stays in place.
     """
     i32 = jnp.int32
     one = jnp.ones((), i32)
@@ -136,8 +180,8 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None):
     NG, NRK = len(_G_KEYS), len(_R_KEYS)
     b2i = lambda b: b.astype(i32)
 
-    sharded = MESH is not None
-    D = int(MESH.devices.size) if sharded else 1
+    sharded = MESH is not None and PIPE == "scan"   # per-op collectives?
+    D = int(MESH.devices.size) if MESH is not None else 1
     SPD = KS // D                    # shards per device (divisibility checked
                                      # by the caller)
     if sharded:
@@ -573,15 +617,28 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None):
 
         return jax.lax.scan(step, af, xs)
 
-    if not sharded:
-        return jax.jit(run)
-    # mesh-placed execution: the TSU-side state is partitioned along the
-    # fabric axis, everything else replicated; the per-op results come
-    # back replicated (identical on every device by construction)
+    if MESH is None:
+        # the fabric state is donated: callers always rebind it to the
+        # returned carry, and aliasing lets XLA update the tier/TSU
+        # arrays in place across batches
+        return jax.jit(run, donate_argnums=0)
     af_spec = _af_pspecs()
-    return jax.jit(shard_map(run, MESH,
+    if sharded:
+        # per-op collective schedule (PIPE="scan"): the TSU-side state is
+        # partitioned along the fabric axis, everything else replicated;
+        # the per-op results come back replicated (identical on every
+        # device by construction)
+        return jax.jit(shard_map(run, MESH,
+                                 in_specs=(af_spec, P(), P(), P()),
+                                 out_specs=(af_spec, P()), check_vma=False),
+                       donate_argnums=0)
+
+    # the batched grant pipeline: ONE packed collective per batch around
+    # the collective-free scan (_shard_exchange)
+    return jax.jit(shard_map(_shard_exchange(run, KS, D), MESH,
                              in_specs=(af_spec, P(), P(), P()),
-                             out_specs=(af_spec, P()), check_vma=False))
+                             out_specs=(af_spec, P()), check_vma=False),
+                   donate_argnums=0)
 
 
 @functools.lru_cache(maxsize=8)
@@ -633,6 +690,31 @@ def _build_fast_read(mesh=None):
                              out_specs=(P(),) * 5, check_vma=False))
 
 
+@functools.lru_cache(maxsize=32)
+def _build_miss_run(W1, W2, KS, MESH=None):
+    """Phase 2 of the two-phase batched read, jitted: the vectorized miss
+    pass (``pipeline.make_miss_pass``) — ALL conflict-free rounds of the
+    miss subset in one call (one ``lax.scan`` over the round masks, the
+    fabric state donated so XLA updates it in place), one batched probe
+    per tier, ONE batched TSU grant and one batched fill per tier per
+    round.
+
+    With ``MESH`` the pass runs as a ``shard_map`` body under the batched
+    grant pipeline's collective schedule: the packed TSU buffer is
+    assembled with ONE ``owner_gather`` per call — OUTSIDE the round scan
+    — the pass itself is collective-free, and each device keeps back only
+    its owned rows; a miss-heavy sharded serving batch costs O(1)
+    collectives no matter how many rounds or misses."""
+    fn = P_.make_miss_pass(W1, W2, KS)
+    if MESH is None:
+        return jax.jit(fn, donate_argnums=0)
+    af_spec = _af_pspecs()
+    return jax.jit(shard_map(
+        _shard_exchange(fn, KS, int(MESH.devices.size)), MESH,
+        in_specs=(af_spec,) + (P(),) * 9,
+        out_specs=(af_spec, P()), check_vma=False), donate_argnums=0)
+
+
 class ArrayFabric(FabricBackend):
     """The array-native fabric: ``FabricBackend`` over one jitted op-scan.
 
@@ -644,8 +726,13 @@ class ArrayFabric(FabricBackend):
     """
 
     def __init__(self, cfg: FabricConfig = FabricConfig(),
-                 n_nodes: int = 1, replicas_per_node: int = 1, mesh=None):
+                 n_nodes: int = 1, replicas_per_node: int = 1, mesh=None,
+                 pipeline: str = "batched"):
         self.cfg = cfg = _bounded(cfg)
+        if pipeline not in PIPELINES:
+            raise ValueError(f"pipeline must be one of {PIPELINES}, "
+                             f"got {pipeline!r}")
+        self.pipeline = pipeline
         self.n_nodes = n_nodes
         self.n_replicas = n_nodes * replicas_per_node
         self._rpn = replicas_per_node
@@ -662,10 +749,16 @@ class ArrayFabric(FabricBackend):
             raise ValueError(
                 f"n_shards={self._KS} must be divisible by the fabric "
                 f"mesh's {int(mesh.devices.size)} devices")
+        # without a mesh the two pipelines share one (collective-free)
+        # op-scan — normalize so they share one compilation too
         self._run = _build_run(self._S1, self._W1, self._S2, self._W2,
                                self._KS, self._CAP, n_nodes,
                                self.n_replicas, self._Q, cfg.max_in_flight,
-                               self._LD, mesh)
+                               self._LD, mesh,
+                               pipeline if mesh is not None else "scan")
+        self._miss_run = (_build_miss_run(self._W1, self._W2, self._KS,
+                                          mesh)
+                          if pipeline == "batched" else None)
         self._af = self._init_af()
         # host-side payload plumbing (the arrays decide; this only ships)
         self._keys: Dict = {}
@@ -680,7 +773,7 @@ class ArrayFabric(FabricBackend):
         self.grant_log = collections.deque(maxlen=GRANT_LOG_LEN)
         self._fast_read = _build_fast_read(self.mesh)
         self._meta_dev = None           # device-side kid -> set1 table
-        self.fast_read_batches = 0      # telemetry: all-hit batches served
+        self._fast_read_batches = 0     # all-hit batches (FabricStats field)
         self._writes_since_prune = 0
 
     def _init_af(self) -> _AF:
@@ -804,6 +897,19 @@ class ArrayFabric(FabricBackend):
                                    int(res["dlog_rts"][i][j]),
                                    int(res["dlog_ver"][i][j])))
 
+    def _read_result(self, kid: int, replica: int, found, version, gseq):
+        """Decode one read op's device outputs into the API result: None
+        on a miss, store-buffer forwarding (version < 0) of a posted
+        write, else payload + version.  The ONE read-decode shared by the
+        op-scan path and the batched miss pass (the phase-1 hit loop
+        inlines the same rule for throughput)."""
+        if not found:
+            return None
+        ver = int(version)
+        if ver < 0:
+            return self._pending[(replica, kid)], None
+        return self._vals[int(gseq)], ver
+
     def _decode(self, op: Op, res, i):
         kind = op.kind
         if kind == "read":
@@ -811,12 +917,9 @@ class ArrayFabric(FabricBackend):
                 self.grant_log.append((op.key, int(res["wts"][i]),
                                        int(res["rts"][i]),
                                        int(res["version"][i])))
-            if not res["found"][i]:
-                return None
-            ver = int(res["version"][i])
-            if ver < 0:      # store-buffer forwarding of a posted write
-                return self._pending[(op.replica, self._keys[op.key])], None
-            return self._vals[int(res["gseq"][i])], ver
+            return self._read_result(self._keys[op.key], op.replica,
+                                     res["found"][i], res["version"][i],
+                                     res["gseq"][i])
         if kind == "write":
             kid = self._keys[op.key]
             self._pending[(op.replica, kid)] = op.value
@@ -865,8 +968,12 @@ class ArrayFabric(FabricBackend):
     def read_batch(self, keys: Sequence, replica: int = 0):
         """The two-phase batched read (backend contract), vectorized:
         phase 1 serves every replica-tier lease hit with ONE
-        ``state.tier_probe`` call over the whole batch; phase 2 runs the
-        misses, in op order, through the exact op-scan."""
+        ``state.tier_probe`` call over the whole batch; phase 2 serves
+        the miss subset with the vectorized miss pass (the batched grant
+        pipeline, DESIGN.md §9) — conflict-free rounds, one batched TSU
+        grant per round — falling back to the exact op-scan under
+        ``pipeline="scan"`` or when the subset is so conflict-ridden the
+        round budget (``max(_MIN_ROUND_BUDGET, misses // 4)``) is blown."""
         if not keys:
             return []
         B = len(keys)
@@ -890,7 +997,7 @@ class ArrayFabric(FabricBackend):
         ver, gseq = packed[1], packed[2]
         vals, pend = self._vals, self._pending
         if hit.all():
-            self.fast_read_batches += 1
+            self._fast_read_batches += 1
             return [(vals[g], v) if v >= 0 else (pend[(replica, k)], None)
                     for k, v, g in zip(kids, ver.tolist(), gseq.tolist())]
         out: List = [None] * B
@@ -900,10 +1007,55 @@ class ArrayFabric(FabricBackend):
                       else (vals[int(gseq[i])], v))
         miss = np.nonzero(~hit)[0]
         if miss.size:
-            res = self.apply([Op("read", keys[i], replica=replica)
-                              for i in miss])
+            served = (self._read_misses_batched(keys, kids_np, miss, replica)
+                      if self.pipeline == "batched" else None)
+            if served is None:          # scan pipeline / round-budget bail
+                res = self.apply([Op("read", keys[i], replica=replica)
+                                  for i in miss])
+                served = [r for _, r in res]
             for j, i in enumerate(miss):
-                out[i] = res[j][1]
+                out[i] = served[j]
+        return out
+
+    def _read_misses_batched(self, keys, kids_np, miss, replica):
+        """Serve the miss subset with the vectorized miss pass: split into
+        conflict-free rounds (`pipeline.conflict_rounds`), run each round
+        as ONE jitted pass over the padded subset, then decode results —
+        grant-log appends and payload lookups — in op order.  Returns the
+        per-miss results, or None to signal the op-scan fallback when the
+        subset is too conflict-ridden to pay off."""
+        kids_m = kids_np[miss]
+        meta = self._meta[kids_m]
+        rounds = P_.conflict_rounds(kids_m, meta[:, 0], meta[:, 1])
+        m = miss.size
+        if len(rounds) > max(_MIN_ROUND_BUDGET, m // 4):
+            return None
+        # coarse pow2 buckets (M >= 32 lanes, R >= 4 rounds): the padded
+        # lanes/rounds are fully masked no-ops, and near-miss shape churn
+        # (15 vs 17 misses, 1 vs 2 rounds) must not trigger recompiles on
+        # the serving hot path
+        M = max(32, _next_pow2(m))
+        R = max(4, _next_pow2(len(rounds)))
+        pad = lambda a: np.pad(a.astype(np.int32), (0, M - m))
+        masks = P_.round_masks(rounds, R, M)
+        node = replica // self._rpn
+        self._af, res = self._miss_run(
+            self._af, jnp.asarray(pad(kids_m)), jnp.asarray(pad(meta[:, 0])),
+            jnp.asarray(pad(meta[:, 1])), jnp.asarray(pad(meta[:, 2])),
+            jnp.asarray(masks), np.int32(replica), np.int32(node),
+            jnp.int32(self.cfg.rd_lease), jnp.int32(self.cfg.wr_lease))
+        res = np.asarray(jax.device_get(res))   # packed [7, M] result block
+        fields = dict(zip(P_.RES_FIELDS, res))
+        out: List = []
+        for j, i in enumerate(miss):
+            if fields["mm_used"][j]:
+                self.grant_log.append((keys[i], int(fields["wts"][j]),
+                                       int(fields["rts"][j]),
+                                       int(fields["version"][j])))
+            out.append(self._read_result(int(kids_m[j]), replica,
+                                         fields["found"][j],
+                                         fields["version"][j],
+                                         fields["gseq"][j]))
         return out
 
     # ------------------------------------------------------------ scalar
@@ -940,11 +1092,19 @@ class ArrayFabric(FabricBackend):
             return 0
         return int(np.asarray(self._af.tsu.memts[shard, 0])[hit[0]])
 
+    @property
+    def fast_read_batches(self) -> int:
+        """All-hit batches served by phase 1 alone — a FabricStats field
+        (reported by ``stats()`` so backend equality assertions cover it);
+        this accessor is kept for telemetry callers."""
+        return self._fast_read_batches
+
     def stats(self) -> Dict[str, int]:
         g = np.asarray(jax.device_get(self._af.g))
         out = {k: int(g[i]) for i, k in enumerate(_G_KEYS)}
         out["wb_evictions"] = 0
         out["inval_msgs"] = 0
+        out["fast_read_batches"] = self._fast_read_batches
         return out
 
     def replica_stats(self, replica: int = 0) -> Dict[str, int]:
@@ -962,12 +1122,16 @@ class ShardedArrayFabric(ArrayFabric):
     guard.  This backend realizes that placement: the ``[n_shards,
     capacity]`` TSU table (plus the per-shard grant sequencers and
     version/gseq side arrays) is partitioned over the ``fabric`` mesh axis
-    with ``NamedSharding``, the op-scan runs as a ``repro.sharding.
-    shard_map`` body in which each op's TSU transition executes only on
-    its key's owning device, and ONLY grant results / cross-shard fills
-    travel over collectives — which is exactly the traffic the
-    ``bytes_inter_gpu`` counter measures (Fig. 10).  Client tiers and the
-    write-queue rings stay replicated across the axis.
+    with ``NamedSharding`` and the op-scan runs as a ``repro.sharding.
+    shard_map`` body.  Under the default batched grant pipeline the owned
+    TSU rows are exchanged as ONE packed collective per batch (DESIGN.md
+    §9); under ``pipeline="scan"`` each op's TSU transition executes only
+    on its key's owning device and the grant hops back per scan step (the
+    PR-4 schedule).  Either way the protocol-level cross-shard traffic is
+    what the ``bytes_inter_gpu`` counter measures (Fig. 10) — it counts
+    home-shard misses, not mesh messages, so it is identical across
+    pipelines and mesh sizes.  Client tiers and the write-queue rings
+    stay replicated across the axis.
 
     Still a ``FabricBackend``, still bit-identical to ``HostFabric`` and
     to the single-device ``ArrayFabric`` on any op trace
@@ -980,12 +1144,13 @@ class ShardedArrayFabric(ArrayFabric):
 
     def __init__(self, cfg: FabricConfig = FabricConfig(),
                  n_nodes: int = 1, replicas_per_node: int = 1,
-                 mesh=None, devices=None):
+                 mesh=None, devices=None, pipeline: str = "batched"):
         cfg = _bounded(cfg)
         if mesh is None:
             from repro.launch.mesh import make_fabric_mesh
             mesh = make_fabric_mesh(n_shards=cfg.n_shards, devices=devices)
-        super().__init__(cfg, n_nodes, replicas_per_node, mesh=mesh)
+        super().__init__(cfg, n_nodes, replicas_per_node, mesh=mesh,
+                         pipeline=pipeline)
 
     @property
     def n_shard_devices(self) -> int:
@@ -994,7 +1159,8 @@ class ShardedArrayFabric(ArrayFabric):
 
 def default_fabric(cfg: FabricConfig = FabricConfig(),
                    n_nodes: int = 1,
-                   replicas_per_node: int = 1) -> ArrayFabric:
+                   replicas_per_node: int = 1,
+                   pipeline: str = "batched") -> ArrayFabric:
     """The production entry point servers/adapters default to: mesh-placed
     TSU shards (``ShardedArrayFabric``) whenever the config's shards can
     actually spread over more than one device, the plain single-device
@@ -1002,15 +1168,16 @@ def default_fabric(cfg: FabricConfig = FabricConfig(),
     multi-device hosts — a 1-device mesh would pay the shard_map masked
     execution for zero placement benefit).
 
-    The sharded default trades single-stream throughput for placement:
-    each grant is one collective hop (ROADMAP lists batching cross-shard
-    grants per scan step as the follow-up) in exchange for TSU transitions
-    executing on the device that owns the memory — the paper's layout."""
+    Both run the batched grant pipeline by default: ONE packed grant
+    collective per batch and the vectorized miss pass (DESIGN.md §9), so
+    sharded placement no longer trades batch throughput for locality.
+    ``pipeline="scan"`` selects the per-op schedule for ordering-sensitive
+    debugging."""
     cfg = _bounded(cfg)
     if len(jax.devices()) > 1:
         from repro.launch.mesh import make_fabric_mesh
         mesh = make_fabric_mesh(n_shards=cfg.n_shards)
         if int(mesh.devices.size) > 1:
             return ShardedArrayFabric(cfg, n_nodes, replicas_per_node,
-                                      mesh=mesh)
-    return ArrayFabric(cfg, n_nodes, replicas_per_node)
+                                      mesh=mesh, pipeline=pipeline)
+    return ArrayFabric(cfg, n_nodes, replicas_per_node, pipeline=pipeline)

@@ -117,11 +117,19 @@ class FabricBackend(abc.ABC):
         """Batched read with TWO-PHASE semantics (the serving hot path):
         replica-tier lease hits are served first, in op order, then the
         misses run the full descend-and-fill transition, in op order.
-        Both backends implement exactly this order (the array backend
-        serves phase 1 as ONE vectorized probe), so batched reads stay
-        bit-identical across backends; ``apply`` keeps plain sequential
-        per-op semantics."""
+        Both backends implement exactly this order — the array backend
+        serves phase 1 as ONE vectorized probe and, under the default
+        ``pipeline="batched"``, the whole miss subset as a second
+        vectorized pass (one batched TSU grant + one batched fill per
+        tier, DESIGN.md §9) — so batched reads stay bit-identical across
+        backends; ``apply`` keeps plain sequential per-op semantics.
+
+        A batch every key of which hits phase 1 bumps the
+        ``fast_read_batches`` stats field on every backend (part of the
+        FabricStats block, so stats-equality assertions cover it)."""
         hits = [self.peek(k, replica) for k in keys]
+        if keys and all(hits):
+            self._note_fast_read_batch()
         out: List = [None] * len(keys)
         for i, k in enumerate(keys):
             if hits[i]:
@@ -130,6 +138,9 @@ class FabricBackend(abc.ABC):
             if not hits[i]:
                 out[i] = self.read(k, replica)
         return out
+
+    def _note_fast_read_batch(self) -> None:
+        """Record an all-hit batch in this backend's stats block."""
 
     def write_batch(self, items: Sequence[Tuple[Any, Any]],
                     replica: int = 0, wr_lease: Optional[int] = None) -> None:
@@ -201,6 +212,9 @@ class HostFabric(FabricBackend):
         fab.read, fab.write = read, write
 
     # ------------------------------------------------------------- ops
+    def _note_fast_read_batch(self) -> None:
+        self.fabric.stats.bump("fast_read_batches")
+
     def peek(self, key, replica: int = 0) -> bool:
         return self.replicas[replica].peek(key)
 

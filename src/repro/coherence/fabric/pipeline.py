@@ -1,0 +1,313 @@
+"""The batched grant pipeline: `read_batch` phase 2 as vectorized passes.
+
+PR 3's two-phase batched read served every replica-tier lease hit with ONE
+vectorized probe (phase 1) but re-ran the miss subset through the exact
+per-op scan — so a miss-heavy serving batch still paid one scan step (and,
+sharded, one grant collective) per op.  This module completes the fast
+path (ISSUE 5 tentpole, DESIGN.md §9): the whole miss subset is served by
+a SECOND vectorized pass — one batched tier probe, one batched TSU grant
+(``state.tsu_lease_batch``), one batched fill per tier — so a batch costs
+O(tiers) array ops and, on the sharded fabric, ONE packed grant collective
+instead of O(ops).
+
+Bit-identity with the sequential oracle (`HostFabric`, and the
+``pipeline="scan"`` op-scan) is preserved by executing the pass over
+**conflict-free rounds**:
+
+  * ``conflict_rounds`` splits the miss subset, in op order, into maximal
+    contiguous segments in which no two ops share a key, a replica-tier
+    set, or a shared-tier set.  Ops in one round touch disjoint cache
+    state (distinct TSU entries — keys are distinct; distinct tier sets —
+    so probes, victim choices and fills cannot observe each other), hence
+    executing them simultaneously equals executing them sequentially.
+  * The one piece of state every op shares — the per-store LRU tick — is
+    reproduced exactly with prefix-sum rank math: op *i*'s touch writes
+    ``tick0 + cumsum(touch+fill)[i] - fill[i]`` and its fill writes
+    ``tick0 + cumsum(touch+fill)[i]``, the precise values the sequential
+    scan would have written (see DESIGN.md §9 for the proof).
+
+All rounds run inside ONE jitted ``lax.scan`` over the round masks (the
+fabric state is the scan carry, so XLA updates it in place; per-op
+results accumulate into one packed ``[7, M]`` buffer), and on the sharded
+fabric the packed TSU buffer is assembled ONCE before the round scan —
+the per-batch collective budget stays O(1) no matter how many rounds the
+subset needs.
+
+A serving batch (deduplicated keys, sets spread by ``stable_hash``) is a
+single round; pathological batches degrade to a few rounds, and
+``ArrayFabric.read_batch`` falls back to the op-scan beyond a small round
+budget — ordering-sensitive debugging can force that path permanently
+with ``pipeline="scan"``.
+
+``make_miss_pass`` returns the pure pass; `arrays.py` owns jitting and the
+mesh placement (packed-TSU ``owner_gather`` in, ``owner_take`` out).
+``collective_counts`` walks a jaxpr and reports how many collectives it
+contains and how many sit inside a scan/while loop — the parity suite's
+O(1)-collectives-per-batch pin and the ``batched_grants`` benchmark row
+both read it.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.coherence.fabric.stats import GI, G_KEYS, RI, R_KEYS
+from repro.core import state as S
+
+# the packed per-op result block ([7, M] int32), field order fixed
+RES_FIELDS = ("found", "version", "gseq", "level", "wts", "rts", "mm_used")
+
+
+def conflict_rounds(kids, s1, s2) -> List[np.ndarray]:
+    """Split a miss subset (op order) into maximal contiguous conflict-free
+    rounds: within a round all keys, replica sets and shared sets are
+    distinct.  Returns index arrays into the subset; concatenated they are
+    ``range(len(kids))`` — rounds never reorder ops, so committing them in
+    round order IS the sequential op order."""
+    rounds: List[np.ndarray] = []
+    cur: List[int] = []
+    seen_k, seen_1, seen_2 = set(), set(), set()
+    for i, (k, a, b) in enumerate(zip(np.asarray(kids).tolist(),
+                                      np.asarray(s1).tolist(),
+                                      np.asarray(s2).tolist())):
+        if k in seen_k or a in seen_1 or b in seen_2:
+            rounds.append(np.asarray(cur, np.int64))
+            cur = []
+            seen_k, seen_1, seen_2 = set(), set(), set()
+        cur.append(i)
+        seen_k.add(k)
+        seen_1.add(a)
+        seen_2.add(b)
+    rounds.append(np.asarray(cur, np.int64))
+    return rounds
+
+
+def round_masks(rounds: List[np.ndarray], n_rounds: int,
+                width: int) -> np.ndarray:
+    """Pack conflict rounds into a dense ``[n_rounds, width]`` bool mask
+    matrix (rows beyond ``len(rounds)`` are empty — a fully masked pass is
+    a no-op), the shape the one-jit round scan consumes."""
+    masks = np.zeros((n_rounds, width), bool)
+    for r, idxs in enumerate(rounds):
+        masks[r, idxs] = True
+    return masks
+
+
+def make_miss_pass(W1: int, W2: int, KS: int):
+    """Build the vectorized miss pass for one tier geometry (W1/W2 = tier
+    way counts, i.e. the trash-way indices; KS = TSU shard count).
+
+    The returned function has the signature
+    ``pass_(af, kids, s1, s2, shard, masks, rep, node, rd, wr)
+    -> (af, res)`` where ``af`` is the fabric state pytree (arrays._AF),
+    kids/s1/s2/shard are [M] int32 op arrays (padded), ``masks`` is the
+    [R, M] conflict-round matrix (each row one conflict-free round),
+    rep/node are scalars (one replica per read_batch call), and ``res``
+    is the packed [7, M] per-op result block (``RES_FIELDS`` order) of
+    the op-scan's read path.
+
+    The rounds run as ONE ``lax.scan`` with the fabric state as carry;
+    each round body is the read path of ``arrays._build_run``'s step
+    function re-expressed over a whole conflict-free round at once —
+    every lease decision is the same ``core.state`` call the scan makes.
+    """
+    i32 = jnp.int32
+    NG, NR = len(G_KEYS), len(R_KEYS)
+    b2i = lambda b: b.astype(i32)
+
+    def gsum(**kw):
+        out = jnp.zeros((NG,), i32)
+        return out.at[jnp.array([GI[k] for k in kw], i32)].add(
+            jnp.stack(list(kw.values())))
+
+    def rsum(**kw):
+        out = jnp.zeros((NR,), i32)
+        return out.at[jnp.array([RI[k] for k in kw], i32)].add(
+            jnp.stack(list(kw.values())))
+
+    def round_body(af, out, act, kids, s1, s2, shard, rep, node, rd, wr):
+        M = kids.shape[0]
+        z = jnp.zeros((M,), i32)
+        reps = jnp.full((M,), rep, i32)
+        nodes = jnp.full((M,), node, i32)
+
+        # ---- replica probe (ReplicaCache.get): classify + self-invalidate
+        th1, h1, way1, _, _, _, _ = S.tier_probe(af.rp, reps, s1, kids, z, z)
+        th1, h1 = th1 & act, h1 & act
+        hit_ver = af.rp.ver[reps, s1, way1]
+        hit_gs = af.rp_gseq[reps, s1, way1]
+        miss = act & ~h1
+        coh = miss & th1
+        comp = miss & ~th1
+        w1d = jnp.where(coh, way1, W1)
+        rp_tag = af.rp.tag.at[reps, s1, w1d].set(
+            jnp.where(coh, S.INVALID, af.rp.tag[reps, s1, w1d]))
+
+        # ---- shared probe (SharedCache.get, only on a replica miss)
+        th2, h2, way2, _, _, _, _ = S.tier_probe(af.sh, nodes, s2, kids, z, z)
+        th2, h2 = th2 & miss, h2 & miss
+        sh_ver = af.sh.ver[nodes, s2, way2]
+        sh_gs = af.sh_gseq[nodes, s2, way2]
+        sh_wts = af.sh.wts[nodes, s2, way2]
+        sh_rts = af.sh.rts[nodes, s2, way2]
+        coh2 = miss & th2 & ~h2
+        w2d = jnp.where(coh2, way2, W2)
+        sh_tag = af.sh.tag.at[nodes, s2, w2d].set(
+            jnp.where(coh2, S.INVALID, af.sh.tag[nodes, s2, w2d]))
+
+        # ---- ONE batched TSU grant for the whole round (state rules)
+        need_mm = miss & ~h2
+        found, mwts, mrts, mver, mgs, ovf, tsu2 = S.tsu_lease_batch(
+            af.tsu, af.tsu_ver, af.tsu_gseq, shard, kids, rd, wr, need_mm)
+        fndF = need_mm & found
+        home_miss = shard != node % KS
+
+        # ---- response chain (what travels up to each tier)
+        resp_found = h2 | fndF
+        nwA, nrA, _ = S.install_lease(af.sh.cts[nodes], mwts, mrts)
+        resp_ver = jnp.where(h2, sh_ver, mver)
+        resp_gs = jnp.where(h2, sh_gs, mgs)
+        resp_wts = jnp.where(h2, sh_wts, nwA)
+        resp_rts = jnp.where(h2, sh_rts, nrA)
+        nw1, nr1, _ = S.install_lease(af.rp.cts[reps], resp_wts, resp_rts)
+
+        # ---- sequential tick math (the op-scan's exact LRU trajectory):
+        # per op the touch bump precedes the install bump, so op i's touch
+        # writes tick0 + c[i] - fill[i] and its install tick0 + c[i] with
+        # c = cumsum(touch + fill) — prefix sums over op order.
+        c1 = jnp.cumsum(b2i(th1) + b2i(resp_found))
+        lru_t1 = af.rp_tick[rep] + c1 - b2i(resp_found)
+        lru_f1 = af.rp_tick[rep] + c1
+        c2 = jnp.cumsum(b2i(th2) + b2i(fndF))
+        lru_t2 = af.sh_tick[node] + c2 - b2i(fndF)
+        lru_f2 = af.sh_tick[node] + c2
+
+        def tier_fill(tag, lru, arrays, idx, st, th, touch_lru, way,
+                      fill_c, vals, fill_lru, trash):
+            """Touch + victim + fill on one (already-dropped) tier: the
+            LRU touch refresh, then the packed install at the victim way
+            — direct per-field scatters so the round scan updates the
+            carried arrays in place."""
+            wt = jnp.where(th, way, trash)
+            lru = lru.at[idx, st, wt].set(
+                jnp.where(th, touch_lru, lru[idx, st, wt]))
+            vic = S.victim(tag, lru, idx, st)
+            evicted = fill_c & (tag[idx, st, vic] != S.INVALID)
+            wf = jnp.where(fill_c, vic, trash)
+
+            def put(a, v):
+                return a.at[idx, st, wf].set(
+                    jnp.where(fill_c, v, a[idx, st, wf]))
+
+            outs = [put(a, v) for a, v in arrays]
+            return put(tag, vals), put(lru, fill_lru), outs, evicted
+
+        sh_tag2, sh_lru2, (sh_wts2, sh_rts2, sh_ver2, sh_gseq2), evF = \
+            tier_fill(sh_tag, af.sh.lru,
+                      [(af.sh.wts, nwA), (af.sh.rts, nrA),
+                       (af.sh.ver, mver), (af.sh_gseq, mgs)],
+                      nodes, s2, th2, lru_t2, way2, fndF, kids, lru_f2, W2)
+        rp_tag2, rp_lru2, (rp_wts2, rp_rts2, rp_ver2, rp_gseq2), ev1 = \
+            tier_fill(rp_tag, af.rp.lru,
+                      [(af.rp.wts, nw1), (af.rp.rts, nr1),
+                       (af.rp.ver, resp_ver), (af.rp_gseq, resp_gs)],
+                      reps, s1, th1, lru_t1, way1, resp_found, kids,
+                      lru_f1, W1)
+
+        # ---- counters: the scan's per-read gv/rv calls, summed per round
+        n = lambda b: jnp.sum(b2i(b))
+        b12, b2m, big = S.link_bytes(n(miss), n(need_mm),
+                                     n(need_mm & home_miss))
+        g2 = af.g + gsum(
+            reads=n(act), l1_hits=n(h1), l2_hits=n(h2), l1_to_l2=n(miss),
+            coh_miss_l1=n(coh), coh_miss_l2=n(coh2),
+            self_invalidations=n(coh) + n(coh2), compulsory=n(comp),
+            l2_to_mm=n(need_mm), pcie_blocks=n(need_mm & home_miss),
+            refetches=n(resp_found), overflow_reinits=n(ovf),
+            capacity_evictions=n(evF) + n(ev1),
+            bytes_l1_l2=b12, bytes_l2_mm=b2m, bytes_inter_gpu=big)
+        r2 = af.r.at[rep].add(rsum(
+            reads=n(act), l1_hits=n(h1), l2_hits=n(h2), l1_to_l2=n(miss),
+            coh_miss_l1=n(coh), coh_miss_l2=n(coh2),
+            self_invalidations=n(coh) + n(coh2), compulsory=n(comp),
+            refetches=n(resp_found),
+            capacity_evictions=n(evF) + n(ev1)))
+
+        af = af._replace(
+            rp=af.rp._replace(tag=rp_tag2, wts=rp_wts2, rts=rp_rts2,
+                              ver=rp_ver2, lru=rp_lru2),
+            rp_gseq=rp_gseq2,
+            rp_tick=af.rp_tick.at[rep].add(
+                jnp.sum(b2i(th1) + b2i(resp_found))),
+            sh=af.sh._replace(tag=sh_tag2, wts=sh_wts2, rts=sh_rts2,
+                              ver=sh_ver2, lru=sh_lru2),
+            sh_gseq=sh_gseq2,
+            sh_tick=af.sh_tick.at[node].add(jnp.sum(b2i(th2) + b2i(fndF))),
+            tsu=tsu2, g=g2, r=r2)
+
+        vals = jnp.stack([
+            b2i(h1 | resp_found),
+            jnp.where(h1, hit_ver, jnp.where(resp_found, resp_ver, -1)),
+            jnp.where(h1, hit_gs, jnp.where(resp_found, resp_gs, -1)),
+            jnp.where(h1, 0, jnp.where(h2, 1, jnp.where(fndF, 2, 3))),
+            jnp.where(fndF, mwts, 0), jnp.where(fndF, mrts, 0),
+            b2i(fndF)])                               # RES_FIELDS order
+        return af, jnp.where(act[None, :], vals, out)
+
+    def pass_(af, kids, s1, s2, shard, masks, rep, node, rd, wr):
+        out0 = jnp.zeros((len(RES_FIELDS), kids.shape[0]), i32)
+
+        def step(carry, act):
+            af, out = carry
+            return round_body(af, out, act, kids, s1, s2, shard, rep,
+                              node, rd, wr), None
+
+        (af, out), _ = jax.lax.scan(step, (af, out0), masks)
+        return af, out
+
+    return pass_
+
+
+# -------------------------------------------------- collective accounting
+_COLLECTIVES = ("all_gather", "all_to_all", "psum", "ppermute",
+                "reduce_scatter")
+_LOOPS = ("scan", "while")
+
+
+def _sub_jaxprs(v):
+    if hasattr(v, "eqns"):                     # a Jaxpr
+        yield v
+    elif hasattr(v, "jaxpr"):                  # a ClosedJaxpr
+        yield v.jaxpr
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def collective_counts(jaxpr) -> dict:
+    """Walk a (closed) jaxpr and count collective primitives: ``total``
+    occurrences and how many sit inside a scan/while body (``in_loop``).
+    A collective inside a loop executes once PER ITERATION — the exact
+    O(ops)-collectives failure mode the batched pipeline removes — so the
+    parity suite pins ``in_loop == 0`` and ``total`` == the per-batch
+    collective budget for ``pipeline="batched"``.  (The miss pass's round
+    scan is collective-free: its one gather sits OUTSIDE the scan.)"""
+    counts = {"total": 0, "in_loop": 0}
+
+    def walk(jx, in_loop):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if any(c in name for c in _COLLECTIVES):
+                counts["total"] += 1
+                if in_loop:
+                    counts["in_loop"] += 1
+            sub_in_loop = in_loop or any(l in name for l in _LOOPS)
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    walk(sub, sub_in_loop)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, False)
+    return counts

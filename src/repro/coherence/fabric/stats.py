@@ -50,6 +50,10 @@ class FabricStats:
     tsu_evictions: int = 0    # TSU set overflow victims (memts reinit to 0)
     overflow_reinits: int = 0 # 16-bit timestamp wraps (Algorithm: reinit)
     fences: int = 0           # barrier ops (kernel-boundary cts jump)
+    fast_read_batches: int = 0  # read_batch calls served entirely by the
+                              # replica tier (every key a lease hit) — part
+                              # of the stats block so backend/sharded
+                              # stats-equality assertions cover it
 
     def bump(self, name: str, by: int = 1) -> None:
         setattr(self, name, getattr(self, name) + by)
@@ -67,3 +71,27 @@ class FabricStats:
 _missing = set(engine.COUNTERS) - {f.name for f in
                                    dataclasses.fields(FabricStats)}
 assert not _missing, f"FabricStats lost engine counters: {_missing}"
+
+
+# ----------------------------------------------- device counter-vector layout
+# The array backends (coherence/fabric/arrays.py op-scan + the batched
+# grant pipeline in coherence/fabric/pipeline.py) accumulate counters as
+# one int32 vector per fabric / per replica; these tuples are the ONE
+# definition of that vector's layout.  wb_evictions / inval_msgs are 0 by
+# construction (the paper's claim) and fast_read_batches is host-side, so
+# none of the three appear here.
+G_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2", "l2_to_mm",
+          "coh_miss_l1", "coh_miss_l2", "pcie_blocks", "write_throughs",
+          "self_invalidations", "compulsory", "refetches",
+          "capacity_evictions", "tsu_evictions", "overflow_reinits",
+          "fences", "bytes_l1_l2", "bytes_l2_mm", "bytes_inter_gpu")
+# the per-replica mirror subset (host ReplicaCache.stats semantics)
+R_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2",
+          "coh_miss_l1", "coh_miss_l2", "self_invalidations", "compulsory",
+          "refetches", "capacity_evictions", "write_throughs")
+GI = {k: i for i, k in enumerate(G_KEYS)}
+RI = {k: i for i, k in enumerate(R_KEYS)}
+
+_unknown = (set(G_KEYS) | set(R_KEYS)) - {f.name for f in
+                                          dataclasses.fields(FabricStats)}
+assert not _unknown, f"counter-vector keys missing from FabricStats: {_unknown}"

@@ -40,14 +40,26 @@ class BatchedKVLease:
     """
 
     def __init__(self, backend: Optional[FabricBackend] = None,
-                 replica: int = 0):
+                 replica: int = 0, pipeline: Optional[str] = None):
+        """``pipeline`` selects the fabric pipeline ("batched" default,
+        "scan" for ordering-sensitive debugging) when this adapter builds
+        its own backend; an explicit ``backend`` already carries its
+        pipeline, so passing both is a conflict, not a silent no-op."""
+        if backend is not None and pipeline is not None:
+            raise ValueError(
+                "pipeline= only applies when BatchedKVLease builds its own "
+                "fabric; construct the backend with pipeline=... instead")
         self.backend = backend if backend is not None else default_fabric(
-            FabricConfig())
+            FabricConfig(), pipeline=pipeline or "batched")
         self.replica = replica
 
     # ------------------------------------------------------------ batched
     def get_batch(self, keys: Sequence[str]) -> List:
-        """[(value, version) | None] per key, one fabric round trip."""
+        """[(value, version) | None] per key, one fabric round trip: lease
+        hits from ONE vectorized probe, the miss subset from the batched
+        grant pipeline's vectorized miss pass (one batched TSU grant + one
+        batched fill per tier — O(1) grant collectives per batch on the
+        sharded fabric, DESIGN.md §9)."""
         return self.backend.read_batch(keys, replica=self.replica)
 
     def put_batch(self, items: Sequence[Tuple[str, Any]]) -> None:

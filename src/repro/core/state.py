@@ -16,6 +16,12 @@ transition functions.  This module holds exactly that:
   * transition functions — probe / victim selection / the TSU grant
     (Algorithm 3 + 16-bit overflow reinit) / the fused tier probe+install
     (Algorithms 1, 2, 4, 5 via ``kernels.lease_probe``) / the TSU commit.
+  * packed buffers + batched rules — each tier's arrays as ONE contiguous
+    buffer (``pack_tier``/``pack_tsu``), the grouped-by-owner shard
+    exchange (``owner_gather``/``owner_take``), and the whole-batch TSU
+    transition (``tsu_lease_batch``/``tsu_commit_batch``) that the
+    batched grant pipeline (DESIGN.md §9) is built from.  The per-op
+    rules above remain the oracle these must match bit-for-bit.
 
 Both consumers import from here and re-derive NOTHING:
 
@@ -31,8 +37,9 @@ implement these rules (DESIGN.md §7 backend-parity contract).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import protocol
@@ -232,3 +239,102 @@ def tier_probe(tier: TierState, idx, set_idx, addr, mwts, mrts):
     return lease_probe(tier.tag[idx, set_idx][..., :-1],
                        tier.rts[idx, set_idx][..., :-1],
                        tier.cts[idx], addr, mwts, mrts)
+
+
+# ------------------------------------------------- packed contiguous buffers
+# The batched grant pipeline (coherence/fabric, DESIGN.md §9) moves tier /
+# TSU state as ONE contiguous buffer per tier: packing turns the per-batch
+# cross-shard exchange into a single collective and the per-request row
+# access into a single gather.  Field order is part of the layout contract.
+TIER_FIELDS = ("tag", "wts", "rts", "ver", "lru")
+TSU_FIELDS = ("tag", "memts", "ver", "gseq", "seq", "nseq")
+
+
+def pack_tier(tier: TierState) -> jnp.ndarray:
+    """Per-tier arrays as ONE contiguous ``[5, N, S, W+1]`` buffer
+    (``TIER_FIELDS`` order; ``cts`` stays separate — it is per-cache, not
+    per-line)."""
+    return jnp.stack([tier.tag, tier.wts, tier.rts, tier.ver, tier.lru])
+
+
+def unpack_tier(buf: jnp.ndarray, cts: jnp.ndarray) -> TierState:
+    return TierState(tag=buf[0], wts=buf[1], rts=buf[2], ver=buf[3],
+                     lru=buf[4], cts=cts)
+
+
+def pack_tsu(tsu: TSUState, ver, gseq, seq, nseq) -> jnp.ndarray:
+    """The TSU tier plus its per-shard sequencers as ONE contiguous
+    ``[6, H, S, W+1]`` buffer (``TSU_FIELDS`` order) — the payload of the
+    batched pipeline's one-collective-per-batch shard exchange.  ``nseq``
+    is ``[H]``; it rides in field 5 at ``[:, 0, 0]`` (the rest of that
+    plane is padding, never read back)."""
+    f5 = jnp.zeros_like(tsu.tag).at[:, 0, 0].set(nseq)
+    return jnp.stack([tsu.tag, tsu.memts, ver, gseq, seq, f5])
+
+
+def unpack_tsu(buf: jnp.ndarray) -> Tuple:
+    """Inverse of ``pack_tsu``: (TSUState, ver, gseq, seq, nseq)."""
+    return (TSUState(tag=buf[0], memts=buf[1]), buf[2], buf[3], buf[4],
+            buf[5][:, 0, 0])
+
+
+def owner_gather(packed: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Grouped-by-owner gather: assemble the full shard-major buffer from
+    every device's contiguous owned rows — ONE ``all_gather`` over the
+    mesh axis, the batched pipeline's single per-batch collective.
+
+    packed: ``[F, H_local, ...]`` (this device's rows).  Returns
+    ``[F, H_local * D, ...]`` with device ``d``'s rows at
+    ``[d*H_local, (d+1)*H_local)`` — the same shard-major placement
+    ``NamedSharding`` lays out."""
+    full = jax.lax.all_gather(packed, axis_name)        # [D, F, Hl, ...]
+    full = jnp.moveaxis(full, 0, 1)                     # [F, D, Hl, ...]
+    return full.reshape((full.shape[0],
+                         full.shape[1] * full.shape[2]) + full.shape[3:])
+
+
+def owner_take(packed_full: jnp.ndarray, me, rows: int) -> jnp.ndarray:
+    """Grouped-by-owner scatter (the no-communication half): slice this
+    device's contiguous ``rows`` shard rows back out of the full buffer."""
+    return jax.lax.dynamic_slice_in_dim(packed_full, me * rows, rows, axis=1)
+
+
+def tsu_commit_batch(tsu: TSUState, idx, set_idx, way, addr, new_memts,
+                     active) -> TSUState:
+    """Batched exact TSU commit: one scatter for a whole batch of grants.
+
+    Same slot semantics as ``tsu_commit_exact`` (the host dict's replace),
+    vectorized — the caller must guarantee that no two ACTIVE requests in
+    the batch target the same ``(idx, set_idx, way)`` slot (one request
+    per key per call; distinct keys always occupy distinct slots).
+    Inactive requests are routed to the trash way and write back the
+    slot's original values."""
+    return tsu_commit_exact(tsu, idx, set_idx, way, addr, new_memts, active)
+
+
+def tsu_lease_batch(tsu: TSUState, ver_arr, gseq_arr, shard, key,
+                    rd_lease, wr_lease, active):
+    """The batched read-side TSU transition: ONE probe + grant + commit for
+    a whole batch of requests (the ``mm_read`` half of the batched grant
+    pipeline, DESIGN.md §9).
+
+    Per request: probe the shard's fully-associative set, grant via
+    Algorithm 3 (+ the 16-bit overflow reinit) against the entry's current
+    clock, and commit the extended ``memts`` exactly — all vectorized.
+    Requires DISTINCT active keys (one request per key per call; the
+    pipeline's conflict-round grouping guarantees it), because the commit
+    is a one-shot batched scatter.
+
+    shard/key: [n]; active: [n] bool (inactive requests touch nothing).
+    Returns (found, wts, rts, ver, gseq, overflow, new_tsu): ``found`` is
+    active AND the entry exists; ver/gseq are -1 when not found;
+    ``overflow`` flags found grants that re-initialized the entry."""
+    zset = jnp.zeros_like(shard)
+    th, way = probe(tsu.tag, shard, zset, key)
+    found = active & th
+    memts = jnp.where(th, tsu.memts[shard, zset, way], 0)
+    gr = tsu_lease(memts, jnp.zeros(key.shape, bool), rd_lease, wr_lease)
+    new = tsu_commit_batch(tsu, shard, zset, way, key, gr.new_memts, found)
+    ver = jnp.where(found, ver_arr[shard, zset, way], -1)
+    gs = jnp.where(found, gseq_arr[shard, zset, way], -1)
+    return found, gr.wts, gr.rts, ver, gs, found & gr.overflow, new

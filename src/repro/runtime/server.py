@@ -7,6 +7,11 @@ revalidation while the lease is live).  Since the array-native refactor
 all groups' prefix keys go through ``BatchedKVLease.get_batch`` (a single
 vectorized ``state.tier_probe`` on the steady state), the missing prefixes
 are prefilled once, and ONE ``put_batch`` posts their write-throughs.
+Since the batched grant pipeline (DESIGN.md §9) the MISS subset is also
+vectorized — one batched TSU grant + one batched fill per tier, so a
+miss-heavy serve call costs O(1) grant collectives on the sharded fabric
+instead of one per missing prefix.  ``fabric_stats["fast_read_batches"]``
+counts the serve calls the replica tier absorbed entirely.
 There is no per-key host-object path left: every lease comes from a
 ``FabricBackend`` (default ``default_fabric()`` — the mesh-placed
 ``ShardedArrayFabric`` whenever the process sees more than one device, so
@@ -44,11 +49,18 @@ def _prefix_key(tokens: np.ndarray) -> str:
 class Server:
     def __init__(self, cfg, params, *, batch_size: int = 4,
                  max_len: int = 128,
-                 fabric: Optional[FabricBackend] = None, replica: int = 0):
+                 fabric: Optional[FabricBackend] = None, replica: int = 0,
+                 pipeline: Optional[str] = None):
+        # pipeline= applies only when the server builds its own fabric; an
+        # explicit fabric already carries its pipeline (conflict = error)
+        if fabric is not None and pipeline is not None:
+            raise ValueError(
+                "pipeline= only applies when Server builds its own fabric; "
+                "construct the fabric with pipeline=... instead")
         self.cfg, self.params = cfg, params
         self.B, self.max_len = batch_size, max_len
         self.fabric = fabric if fabric is not None else default_fabric(
-            FabricConfig())
+            FabricConfig(), pipeline=pipeline or "batched")
         self.kv = BatchedKVLease(self.fabric, replica=replica)
         self._prefill = jax.jit(
             lambda p, c, t: prefill(cfg, p, t, c, ctx=NOSHARD))

@@ -1,6 +1,10 @@
 """Backend-parity suite: the array-native fabric is BIT-IDENTICAL to the
-host-object fabric (DESIGN.md §7), and the mesh-sharded fabric to both
-(DESIGN.md §8).
+host-object fabric (DESIGN.md §7), the mesh-sharded fabric to both
+(DESIGN.md §8), and the batched grant pipeline — the vectorized
+read_batch miss pass plus the one-collective-per-batch sharded schedule —
+to all of the above AND to its own ``pipeline="scan"`` fallback
+(DESIGN.md §9), with a structural jaxpr pin that a batch issues O(1)
+grant collectives rather than one per op.
 
 Randomized op traces (reads/writes/fences/authority ops across replicas,
 including forced 16-bit overflow reinits and TSU victim evictions) are
@@ -41,6 +45,14 @@ OVERFLOW = dict(n_shards=1, rd_lease=protocol.TS_MAX // 2, wr_lease=20000,
                 tsu_capacity=2, shared_sets=2, shared_ways=1,
                 replica_sets=1, replica_ways=2, max_in_flight=0)
 
+# roomier tiers: read batches over these rarely collide on a set, so the
+# batched pipeline's miss pass runs genuinely vectorized rounds (SMALL's
+# 2-set replica tier shreds batches into near-sequential rounds and mostly
+# exercises the op-scan fallback instead — both paths must stay exact)
+MEDIUM = dict(n_shards=4, rd_lease=8, wr_lease=4, tsu_capacity=64,
+              shared_sets=64, shared_ways=4, replica_sets=32,
+              replica_ways=2, max_in_flight=4)
+
 KEYS = [f"k{i}" for i in range(8)]
 
 
@@ -73,6 +85,16 @@ def build_pair(cfg_kw, n_nodes=2, replicas_per_node=2):
                        replicas_per_node=replicas_per_node),
             ArrayFabric(cfg, n_nodes=n_nodes,
                         replicas_per_node=replicas_per_node))
+
+
+def build_triple(cfg_kw, n_nodes=2, replicas_per_node=2):
+    """host oracle + batched-pipeline array + scan-pipeline array."""
+    cfg = FabricConfig(**cfg_kw)
+    mk = lambda **kw: ArrayFabric(cfg, n_nodes=n_nodes,
+                                  replicas_per_node=replicas_per_node, **kw)
+    return (HostFabric(cfg, n_nodes=n_nodes,
+                       replicas_per_node=replicas_per_node),
+            mk(pipeline="batched"), mk(pipeline="scan"))
 
 
 def assert_equivalent(host, arr, ops):
@@ -139,10 +161,156 @@ def test_fast_path_equals_scan_path_on_all_hit_batch():
     r2 = [x for _, x in a2.apply([Op("read", k) for k in keys])]
     assert r1 == r2
     assert a1.fast_read_batches == 1
-    assert a1.stats() == a2.stats()
+    s1, s2 = a1.stats(), a2.stats()
+    # the all-hit batch is itself counted (FabricStats field); raw apply
+    # is not a read_batch call, so it legitimately records none
+    assert (s1.pop("fast_read_batches"), s2.pop("fast_read_batches")) == (1, 0)
+    assert s1 == s2
     for x, y in zip(jax.tree_util.tree_leaves(a1._af),
                     jax.tree_util.tree_leaves(a2._af)):
         assert (np.asarray(x) == np.asarray(y)).all()
+
+
+# ------------------------------------------------- batched grant pipeline
+def _drive_read_batches(backends, seed, n_calls=6, batch=24):
+    """Interleave randomized mixed hit/miss/dup read batches with writes
+    and fences on every backend; returns the per-call results."""
+    outs = [[] for _ in backends]
+    rng = np.random.default_rng(seed)
+    for c in range(n_calls):
+        ks = [KEYS[int(rng.integers(len(KEYS)))] for _ in range(batch)]
+        ks.append(f"fresh{c}")              # unknown key: compulsory miss
+        rep = int(rng.integers(backends[0].n_replicas))
+        for o, b in zip(outs, backends):
+            o.append(b.read_batch(ks, replica=rep))
+        wk = KEYS[int(rng.integers(len(KEYS)))]
+        for b in backends:                  # expire leases between calls
+            b.write(wk, f"w{seed}.{c}", replica=0)
+            if c % 2:
+                b.fence()
+    return outs
+
+
+def assert_state_equal(a, b):
+    import jax
+
+    for x, y in zip(jax.tree_util.tree_leaves(a._af),
+                    jax.tree_util.tree_leaves(b._af)):
+        assert (np.asarray(jax.device_get(x))
+                == np.asarray(jax.device_get(y))).all()
+
+
+@pytest.mark.parametrize("seed,cfg_kw", [(0, SMALL), (1, SMALL), (2, SMALL),
+                                         (0, MEDIUM), (1, MEDIUM)])
+def test_batched_pipeline_mixed_batch_parity(seed, cfg_kw):
+    """The tentpole pin: the vectorized miss pass (pipeline="batched") is
+    bit-identical to the scan pipeline AND the host oracle on randomized
+    mixed hit/miss/write/fence batches — per-op results, ordered grant
+    log, FabricStats, replica mirrors, memts, and the full device state
+    of batched-vs-scan.  SMALL mostly stresses the conflict-round
+    fallback; MEDIUM runs real multi-op vectorized rounds."""
+    host, batched, scan = build_triple(cfg_kw)
+    warm = random_trace(np.random.default_rng(seed + 100), 150, 4)
+    for b in (host, batched, scan):
+        b.apply(warm)
+    oh, ob, os_ = _drive_read_batches((host, batched, scan), seed)
+    assert oh == ob, "batched pipeline diverged from the host oracle"
+    assert oh == os_, "scan pipeline diverged from the host oracle"
+    assert host.stats() == batched.stats() == scan.stats()
+    assert list(host.grant_log) == list(batched.grant_log) \
+        == list(scan.grant_log)
+    for r in range(host.n_replicas):
+        assert host.replica_stats(r) == batched.replica_stats(r) \
+            == scan.replica_stats(r)
+    for k in KEYS:
+        assert host.memts(k) == batched.memts(k) == scan.memts(k)
+    assert_state_equal(batched, scan)
+
+
+def test_batched_grant_overflow_reinit_and_tsu_eviction():
+    """Forced 16-bit overflow reinits INSIDE the vectorized miss pass
+    (state.tsu_lease_batch's reinit branch) and TSU victim evictions
+    inside batched write-throughs, bit-identical across host / batched /
+    scan.  Two write rounds at wr_lease=30000 push memts to ~60000, so a
+    fresh replica's read grant (rd_lease=TS_MAX//2) must wrap; the
+    2-entry-TSU config forces victim eviction on every allocation."""
+    ov = dict(OVERFLOW, tsu_capacity=4, rd_lease=protocol.TS_MAX // 2)
+    host, batched, scan = build_triple(ov, n_nodes=1, replicas_per_node=2)
+    for b in (host, batched, scan):
+        for rnd in range(2):
+            b.write_batch([(k, f"{k}@{rnd}") for k in KEYS[:4]],
+                          replica=0, wr_lease=30000)
+            b.fence()
+    ks = KEYS[:4] + KEYS[:2]                # dups exercise conflict rounds
+    rh = host.read_batch(ks, replica=1)
+    assert rh == batched.read_batch(ks, replica=1)
+    assert rh == scan.read_batch(ks, replica=1)
+    assert host.stats() == batched.stats() == scan.stats()
+    assert list(host.grant_log) == list(batched.grant_log)
+    assert host.stats()["overflow_reinits"] > 0, \
+        "the batched grant never hit the reinit branch"
+    assert_state_equal(batched, scan)
+
+    # tiny TSU: victim evictions inside the batched write-throughs
+    host2, batched2, scan2 = build_triple(OVERFLOW, n_nodes=1,
+                                          replicas_per_node=2)
+    for b in (host2, batched2, scan2):
+        b.write_batch([(k, f"{k}@e") for k in KEYS], replica=0)
+        b.fence()
+    rh2 = host2.read_batch(KEYS, replica=1)
+    assert rh2 == batched2.read_batch(KEYS, replica=1)
+    assert rh2 == scan2.read_batch(KEYS, replica=1)
+    assert host2.stats() == batched2.stats() == scan2.stats()
+    assert host2.stats()["tsu_evictions"] > 0, "eviction never triggered"
+
+
+def test_fast_read_batches_in_stats():
+    """Satellite pin: the all-hit-batch counter lives in the stats block
+    on BOTH backends, so the existing stats-equality assertions cover it."""
+    host, arr = build_pair(SMALL)
+    for b in (host, arr):
+        b.write_batch([(k, f"{k}@0") for k in KEYS[:4]], replica=1)
+        b.fence()
+        b.read_batch(KEYS[:4], replica=1)       # fill the replica tier
+        b.read_batch(KEYS[:4], replica=1)       # pure lease-hit batch
+    assert host.stats()["fast_read_batches"] == \
+        arr.stats()["fast_read_batches"] > 0
+    assert host.stats() == arr.stats()
+    assert arr.fast_read_batches == arr.stats()["fast_read_batches"]
+
+
+def test_batched_pipeline_one_collective_per_batch():
+    """The acceptance pin: under pipeline="batched" a sharded batch of B
+    ops issues O(1) grant collectives — ONE packed all_gather at batch
+    level and NONE inside the op-scan — while pipeline="scan" keeps its
+    per-scan-step collective.  Counted structurally in the jaxpr, so the
+    pin holds on any mesh size (the collective executes once per batch
+    regardless of B)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.coherence.fabric.pipeline import collective_counts
+
+    cfg = FabricConfig(**SMALL)
+    xs = {k: jnp.zeros((8,), jnp.int32) for k in
+          ("kind", "rep", "node", "key", "set1", "set2", "shard", "wl")}
+    rd = wr = jnp.int32(8)
+
+    counts = {}
+    for pipe in ("batched", "scan"):
+        fab = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                                 pipeline=pipe)
+        jx = jax.make_jaxpr(fab._run)(fab._af, xs, rd, wr)
+        counts[pipe] = collective_counts(jx)
+        if pipe == "batched":
+            m = jnp.zeros((8,), jnp.int32)
+            jm = jax.make_jaxpr(fab._miss_run)(
+                fab._af, m, m, m, m, jnp.zeros((4, 8), bool),
+                jnp.int32(1), jnp.int32(0), rd, wr)
+            counts["miss_pass"] = collective_counts(jm)
+    assert counts["batched"] == {"total": 1, "in_loop": 0}, counts
+    assert counts["miss_pass"] == {"total": 1, "in_loop": 0}, counts
+    assert counts["scan"]["in_loop"] >= 1, counts       # O(B) collectives
 
 
 # ------------------------------------------------------- sharded fabric
@@ -235,6 +403,20 @@ def _sharded_multidevice_check():
         assert sh.replica_stats(r) == arr.replica_stats(r)
     assert sh.stats()["bytes_inter_gpu"] > 0       # the mesh saw real hops
 
+    # batched grant pipeline vs per-op collective schedule on the REAL
+    # mesh: same trace + miss-heavy read batches, everything equal (the
+    # default `sh` above already runs pipeline="batched"; this pins it
+    # against pipeline="scan" executing one collective per op)
+    scan = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                              pipeline="scan")
+    assert sh.pipeline == "batched" and scan.pipeline == "scan"
+    scan.apply(ops)
+    scan.read_batch(batch, replica=1)
+    ob, osc = _drive_read_batches((sh, scan), seed=21, n_calls=3)
+    assert ob == osc, "batched pipeline diverged from scan on the mesh"
+    assert sh.stats() == scan.stats()
+    assert list(sh.grant_log) == list(scan.grant_log)
+
     # overflow reinits + TSU victim evictions through the sharded path
     ocfg = dict(OVERFLOW, n_shards=2)
     host2 = HostFabric(FabricConfig(**ocfg), n_nodes=1, replicas_per_node=2)
@@ -321,7 +503,38 @@ if HAVE_HYPOTHESIS:
             else:
                 ops.append(Op(kind, key, replica=idx))
         assert_equivalent(host, arr, ops)
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(_op, min_size=1, max_size=40),
+           st.lists(st.tuples(st.integers(0, 3),
+                              st.lists(st.sampled_from(KEYS + ["nk0", "nk1"]),
+                                       min_size=1, max_size=20)),
+                    min_size=1, max_size=4))
+    def test_hypothesis_batched_read_parity(trace, batches):
+        """Fuzz the miss-subset ordering contract: a random warm trace,
+        then random mixed hit/miss/dup read batches — batched pipeline vs
+        scan pipeline vs host, results + stats + grant log all equal."""
+        host, batched, scan = build_triple(SMALL)
+        ops = [Op("write", key, f"v{t}", replica=idx) if kind == "write"
+               else Op("fence") if kind == "fence"
+               else Op(kind, key, f"v{t}") if kind in ("mm_write", "publish")
+               else Op(kind, key, replica=idx)
+               for t, (kind, idx, key) in enumerate(trace)]
+        for b in (host, batched, scan):
+            b.apply(ops)
+        for rep, ks in batches:
+            rh = host.read_batch(ks, replica=rep)
+            assert rh == batched.read_batch(ks, replica=rep)
+            assert rh == scan.read_batch(ks, replica=rep)
+        assert host.stats() == batched.stats() == scan.stats()
+        assert list(host.grant_log) == list(batched.grant_log)
+        assert_state_equal(batched, scan)
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_hypothesis_differential():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_batched_read_parity():
         pass
