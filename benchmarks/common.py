@@ -47,8 +47,13 @@ def _fingerprint(fn: Callable, script: Optional[str] = None) -> str:
         import repro.core
         import repro.kernels
         import repro.launch.mesh
+        import repro.obs
         import repro.sharding
-        for pkg in (repro.core, repro.kernels, repro.coherence.fabric):
+        # obs is hashed too: the tracer/histogram layer shapes the
+        # recorded rows (percentiles, phase breakdowns), so an obs change
+        # must invalidate cached bench artifacts
+        for pkg in (repro.core, repro.kernels, repro.coherence.fabric,
+                    repro.obs):
             paths.extend(sorted(pathlib.Path(pkg.__file__).parent
                                 .glob("*.py")))
         # the coherence package itself is a namespace package (no

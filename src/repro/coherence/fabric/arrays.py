@@ -50,6 +50,7 @@ from repro.coherence.fabric.tsu import FabricConfig, stable_hash
 from repro.core import protocol
 from repro.core import state as S
 from repro.core.state import TSUState, TierState
+from repro.obs import trace as obs
 from repro.sharding import named_sharding, shard_map
 
 _NOP, _READ, _WRITE, _FENCE, _MM_WRITE, _PUBLISH, _MM_READ = range(7)
@@ -832,32 +833,40 @@ class ArrayFabric(FabricBackend):
         if B0 == 0:
             return []
         B = max(8, _next_pow2(B0))
-        enc = {k: np.zeros((B,), np.int32) for k in
-               ("kind", "rep", "node", "key", "set1", "set2", "shard", "wl")}
-        for i, op in enumerate(ops):
-            enc["kind"][i] = _KIND[op.kind]
-            if op.kind == "fence":
-                continue
-            kid = self._kid(op.key)
-            s1, s2, shard = self._meta[kid]
-            rep = op.replica
-            node = (op.node if op.kind == "publish"
-                    else rep // self._rpn)
-            enc["rep"][i] = rep
-            enc["node"][i] = node
-            enc["key"][i] = kid
-            enc["set1"][i] = s1
-            enc["set2"][i] = s2
-            enc["shard"][i] = shard
-            enc["wl"][i] = -1 if op.wr_lease is None else op.wr_lease
-        self._af, res = self._run(self._af,
-                                  {k: jnp.asarray(v) for k, v in enc.items()},
-                                  jnp.int32(self.cfg.rd_lease),
-                                  jnp.int32(self.cfg.wr_lease))
-        res = jax.device_get(res)
-        out = [(op, self._decode(op, res, i)) for i, op in enumerate(ops)]
+        with obs.span("fabric.pack", n_ops=B0, padded=B):
+            enc = {k: np.zeros((B,), np.int32) for k in
+                   ("kind", "rep", "node", "key", "set1", "set2", "shard",
+                    "wl")}
+            for i, op in enumerate(ops):
+                enc["kind"][i] = _KIND[op.kind]
+                if op.kind == "fence":
+                    continue
+                kid = self._kid(op.key)
+                s1, s2, shard = self._meta[kid]
+                rep = op.replica
+                node = (op.node if op.kind == "publish"
+                        else rep // self._rpn)
+                enc["rep"][i] = rep
+                enc["node"][i] = node
+                enc["key"][i] = kid
+                enc["set1"][i] = s1
+                enc["set2"][i] = s2
+                enc["shard"][i] = shard
+                enc["wl"][i] = -1 if op.wr_lease is None else op.wr_lease
+        with obs.span("fabric.exchange"):
+            xs = {k: jnp.asarray(v) for k, v in enc.items()}
+        with obs.span("fabric.scan", n_ops=B0):
+            self._af, res = self._run(self._af, xs,
+                                      jnp.int32(self.cfg.rd_lease),
+                                      jnp.int32(self.cfg.wr_lease))
+            obs.fence(res, "fabric.scan.device")
+        with obs.span("fabric.decode", n_ops=B0):
+            res = jax.device_get(res)
+            out = [(op, self._decode(op, res, i))
+                   for i, op in enumerate(ops)]
         if self._writes_since_prune >= _PRUNE_EVERY:
-            self.prune_payloads()       # after decode: results already out
+            with obs.span("fabric.donate"):
+                self.prune_payloads()   # after decode: results already out
         return out
 
     def prune_payloads(self) -> None:
@@ -977,44 +986,53 @@ class ArrayFabric(FabricBackend):
         if not keys:
             return []
         B = len(keys)
-        keymap = self._keys
-        try:
-            kids = [keymap[k] for k in keys]     # hot path: interned keys
-        except KeyError:
-            kids = [self._kid(k) for k in keys]
-        kids_np = np.asarray(kids, np.int32)
-        if self._meta_dev is None:
-            # whole table at its (power-of-two) capacity: stable shapes
-            self._meta_dev = jnp.asarray(self._meta[:, 0])
-        packed, lru2, tick2, g2, r2 = self._fast_read(
-            self._af.rp, self._af.rp_gseq, self._af.rp_tick, self._af.g,
-            self._af.r, self._meta_dev, jnp.asarray(kids_np),
-            np.int32(replica))
-        self._af = self._af._replace(rp=self._af.rp._replace(lru=lru2),
-                                     rp_tick=tick2, g=g2, r=r2)
-        packed = np.asarray(packed)
-        hit = packed[0].astype(bool)
-        ver, gseq = packed[1], packed[2]
-        vals, pend = self._vals, self._pending
-        if hit.all():
-            self._fast_read_batches += 1
-            return [(vals[g], v) if v >= 0 else (pend[(replica, k)], None)
-                    for k, v, g in zip(kids, ver.tolist(), gseq.tolist())]
-        out: List = [None] * B
-        for i in np.nonzero(hit)[0]:
-            v = int(ver[i])
-            out[i] = ((pend[(replica, kids[i])], None) if v < 0
-                      else (vals[int(gseq[i])], v))
-        miss = np.nonzero(~hit)[0]
+        with obs.span("fabric.pack", n_ops=B):
+            keymap = self._keys
+            try:
+                kids = [keymap[k] for k in keys]  # hot path: interned keys
+            except KeyError:
+                kids = [self._kid(k) for k in keys]
+            kids_np = np.asarray(kids, np.int32)
+            if self._meta_dev is None:
+                # whole table at its (power-of-two) capacity: stable shapes
+                self._meta_dev = jnp.asarray(self._meta[:, 0])
+        with obs.span("fabric.fast_probe", n_ops=B):
+            packed, lru2, tick2, g2, r2 = self._fast_read(
+                self._af.rp, self._af.rp_gseq, self._af.rp_tick, self._af.g,
+                self._af.r, self._meta_dev, jnp.asarray(kids_np),
+                np.int32(replica))
+            obs.fence(packed, "fabric.fast_probe.device")
+        with obs.span("fabric.donate"):
+            self._af = self._af._replace(rp=self._af.rp._replace(lru=lru2),
+                                         rp_tick=tick2, g=g2, r=r2)
+        with obs.span("fabric.decode", n_ops=B):
+            packed = np.asarray(packed)
+            hit = packed[0].astype(bool)
+            ver, gseq = packed[1], packed[2]
+            vals, pend = self._vals, self._pending
+            if hit.all():
+                self._fast_read_batches += 1
+                return [(vals[g], v) if v >= 0
+                        else (pend[(replica, k)], None)
+                        for k, v, g in zip(kids, ver.tolist(),
+                                           gseq.tolist())]
+            out: List = [None] * B
+            for i in np.nonzero(hit)[0]:
+                v = int(ver[i])
+                out[i] = ((pend[(replica, kids[i])], None) if v < 0
+                          else (vals[int(gseq[i])], v))
+            miss = np.nonzero(~hit)[0]
         if miss.size:
-            served = (self._read_misses_batched(keys, kids_np, miss, replica)
-                      if self.pipeline == "batched" else None)
-            if served is None:          # scan pipeline / round-budget bail
-                res = self.apply([Op("read", keys[i], replica=replica)
-                                  for i in miss])
-                served = [r for _, r in res]
-            for j, i in enumerate(miss):
-                out[i] = served[j]
+            with obs.span("fabric.miss_pass", misses=int(miss.size)):
+                served = (self._read_misses_batched(keys, kids_np, miss,
+                                                    replica)
+                          if self.pipeline == "batched" else None)
+                if served is None:      # scan pipeline / round-budget bail
+                    res = self.apply([Op("read", keys[i], replica=replica)
+                                      for i in miss])
+                    served = [r for _, r in res]
+                for j, i in enumerate(miss):
+                    out[i] = served[j]
         return out
 
     def _read_misses_batched(self, keys, kids_np, miss, replica):
@@ -1024,38 +1042,44 @@ class ArrayFabric(FabricBackend):
         grant-log appends and payload lookups — in op order.  Returns the
         per-miss results, or None to signal the op-scan fallback when the
         subset is too conflict-ridden to pay off."""
-        kids_m = kids_np[miss]
-        meta = self._meta[kids_m]
-        rounds = P_.conflict_rounds(kids_m, meta[:, 0], meta[:, 1])
         m = miss.size
-        if len(rounds) > max(_MIN_ROUND_BUDGET, m // 4):
-            return None
-        # coarse pow2 buckets (M >= 32 lanes, R >= 4 rounds): the padded
-        # lanes/rounds are fully masked no-ops, and near-miss shape churn
-        # (15 vs 17 misses, 1 vs 2 rounds) must not trigger recompiles on
-        # the serving hot path
-        M = max(32, _next_pow2(m))
-        R = max(4, _next_pow2(len(rounds)))
-        pad = lambda a: np.pad(a.astype(np.int32), (0, M - m))
-        masks = P_.round_masks(rounds, R, M)
-        node = replica // self._rpn
-        self._af, res = self._miss_run(
-            self._af, jnp.asarray(pad(kids_m)), jnp.asarray(pad(meta[:, 0])),
-            jnp.asarray(pad(meta[:, 1])), jnp.asarray(pad(meta[:, 2])),
-            jnp.asarray(masks), np.int32(replica), np.int32(node),
-            jnp.int32(self.cfg.rd_lease), jnp.int32(self.cfg.wr_lease))
-        res = np.asarray(jax.device_get(res))   # packed [7, M] result block
-        fields = dict(zip(P_.RES_FIELDS, res))
-        out: List = []
-        for j, i in enumerate(miss):
-            if fields["mm_used"][j]:
-                self.grant_log.append((keys[i], int(fields["wts"][j]),
-                                       int(fields["rts"][j]),
-                                       int(fields["version"][j])))
-            out.append(self._read_result(int(kids_m[j]), replica,
-                                         fields["found"][j],
-                                         fields["version"][j],
-                                         fields["gseq"][j]))
+        with obs.span("fabric.pack", misses=int(m)):
+            kids_m = kids_np[miss]
+            meta = self._meta[kids_m]
+            rounds = P_.conflict_rounds(kids_m, meta[:, 0], meta[:, 1])
+            if len(rounds) > max(_MIN_ROUND_BUDGET, m // 4):
+                return None
+            # coarse pow2 buckets (M >= 32 lanes, R >= 4 rounds): the padded
+            # lanes/rounds are fully masked no-ops, and near-miss shape churn
+            # (15 vs 17 misses, 1 vs 2 rounds) must not trigger recompiles on
+            # the serving hot path
+            M = max(32, _next_pow2(m))
+            R = max(4, _next_pow2(len(rounds)))
+            pad = lambda a: np.pad(a.astype(np.int32), (0, M - m))
+            masks = P_.round_masks(rounds, R, M)
+            node = replica // self._rpn
+        with obs.span("fabric.exchange", lanes=M, rounds=R):
+            args = (jnp.asarray(pad(kids_m)), jnp.asarray(pad(meta[:, 0])),
+                    jnp.asarray(pad(meta[:, 1])), jnp.asarray(pad(meta[:, 2])),
+                    jnp.asarray(masks))
+        with obs.span("fabric.scan", misses=int(m)):
+            self._af, res = self._miss_run(
+                self._af, *args, np.int32(replica), np.int32(node),
+                jnp.int32(self.cfg.rd_lease), jnp.int32(self.cfg.wr_lease))
+            obs.fence(res, "fabric.scan.device")
+        with obs.span("fabric.decode", misses=int(m)):
+            res = np.asarray(jax.device_get(res))  # packed [7, M] result block
+            fields = dict(zip(P_.RES_FIELDS, res))
+            out: List = []
+            for j, i in enumerate(miss):
+                if fields["mm_used"][j]:
+                    self.grant_log.append((keys[i], int(fields["wts"][j]),
+                                           int(fields["rts"][j]),
+                                           int(fields["version"][j])))
+                out.append(self._read_result(int(kids_m[j]), replica,
+                                             fields["found"][j],
+                                             fields["version"][j],
+                                             fields["gseq"][j]))
         return out
 
     # ------------------------------------------------------------ scalar

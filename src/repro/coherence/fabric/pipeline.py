@@ -56,9 +56,10 @@ import numpy as np
 
 from repro.coherence.fabric.stats import GI, G_KEYS, RI, R_KEYS
 from repro.core import state as S
-
-# the packed per-op result block ([7, M] int32), field order fixed
-RES_FIELDS = ("found", "version", "gseq", "level", "wts", "rts", "mm_used")
+# the packed per-op result block ([7, M] int32) — the layout contract now
+# lives in core.state so the simulator's round step emits the same record
+# (re-exported here for existing consumers)
+from repro.core.state import RES_FIELDS  # noqa: F401
 
 
 def conflict_rounds(kids, s1, s2) -> List[np.ndarray]:
@@ -272,21 +273,6 @@ def make_miss_pass(W1: int, W2: int, KS: int):
 
 
 # -------------------------------------------------- collective accounting
-_COLLECTIVES = ("all_gather", "all_to_all", "psum", "ppermute",
-                "reduce_scatter")
-_LOOPS = ("scan", "while")
-
-
-def _sub_jaxprs(v):
-    if hasattr(v, "eqns"):                     # a Jaxpr
-        yield v
-    elif hasattr(v, "jaxpr"):                  # a ClosedJaxpr
-        yield v.jaxpr
-    elif isinstance(v, (tuple, list)):
-        for x in v:
-            yield from _sub_jaxprs(x)
-
-
 def collective_counts(jaxpr) -> dict:
     """Walk a (closed) jaxpr and count collective primitives: ``total``
     occurrences and how many sit inside a scan/while body (``in_loop``).
@@ -294,20 +280,13 @@ def collective_counts(jaxpr) -> dict:
     O(ops)-collectives failure mode the batched pipeline removes — so the
     parity suite pins ``in_loop == 0`` and ``total`` == the per-batch
     collective budget for ``pipeline="batched"``.  (The miss pass's round
-    scan is collective-free: its one gather sits OUTSIDE the scan.)"""
-    counts = {"total": 0, "in_loop": 0}
+    scan is collective-free: its one gather sits OUTSIDE the scan.)
 
-    def walk(jx, in_loop):
-        for eqn in jx.eqns:
-            name = eqn.primitive.name
-            if any(c in name for c in _COLLECTIVES):
-                counts["total"] += 1
-                if in_loop:
-                    counts["in_loop"] += 1
-            sub_in_loop = in_loop or any(l in name for l in _LOOPS)
-            for v in eqn.params.values():
-                for sub in _sub_jaxprs(v):
-                    walk(sub, sub_in_loop)
+    The walker itself now lives in ``repro.obs.xprof`` (the observability
+    layer's static cost probe, which also reports per-primitive counts
+    and compiled FLOPs/bytes); this wrapper keeps the parity suite's
+    two-field view."""
+    from repro.obs.xprof import jaxpr_collectives
 
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, False)
-    return counts
+    c = jaxpr_collectives(jaxpr)
+    return {"total": c["total"], "in_loop": c["in_loop"]}

@@ -45,8 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import protocol, state as S
-from repro.core.state import INVALID, TSUState, TierState
+from repro.core.state import INVALID, RES_FIELDS, TSUState, TierState
 from repro.core.sysconfig import SystemConfig, stack_configs, static_key
+from repro.obs import trace as obs
 
 NOP, READ, WRITE, FENCE, COMPUTE = 0, 1, 2, 3, 4
 
@@ -146,8 +147,16 @@ def simulate(cfg: SystemConfig, ops, addrs):
         ops = np.pad(ops, pad)
         addrs = np.pad(addrs, pad)
     state = init_state(cfg, n_addr)
-    state, read_log = _sim_fn(cfg, n_addr, T)(state, jnp.asarray(ops).T,
-                                              jnp.asarray(addrs).T)
+    with obs.span("engine.simulate.scan", cat="engine", T=T):
+        state, res_log = _sim_fn(cfg, n_addr, T)(state, jnp.asarray(ops).T,
+                                                 jnp.asarray(addrs).T)
+        obs.fence(res_log, "engine.simulate.device")
+    with obs.span("engine.simulate.decode", cat="engine"):
+        # scan emits the packed per-round result block [T, 7, NC]
+        # (core.state.RES_FIELDS); reshape to per-field [NC, T0] views
+        res_np = np.asarray(res_log).transpose(1, 2, 0)[:, :, :T0]
+        fields = dict(zip(RES_FIELDS, res_np))
+        read_log = np.where(ops[:, :T0] == READ, fields["version"], -1)
     # Runtime: CUs within a GPU hide each other's latency (warp interleaving)
     # -> per-GPU throughput ~ mean CU time; GPUs don't share work -> max.
     per_gpu = state.time.reshape(cfg.n_gpus, cfg.cus_per_gpu).mean(axis=1)
@@ -156,7 +165,8 @@ def simulate(cfg: SystemConfig, ops, addrs):
         "makespan_max": jnp.max(state.time),
         "per_cu_time": state.time,
         "counters": state.ctr,
-        "read_log": read_log.T[:, :T0],  # [NC, T] version returned (-1 = no read)
+        "read_log": read_log,  # [NC, T] version returned (-1 = no read)
+        "res_log": fields,     # {RES_FIELDS: [NC, T]} per-op result block
         "state": state,
     }
 
@@ -205,26 +215,32 @@ def sweep(cfgs: Sequence[SystemConfig], ops, addrs):
             raise ValueError(f"config {c.name} has n_cus={c.n_cus}, "
                              f"traces have NC={NC}")
     n_addr = _next_pow2(int(addrs.max()) + 2)
-    T = _next_pow2(R)
-    if T != R:                               # pad with NOPs (no effect)
-        pad = ((0, 0), (0, 0), (0, T - R))
-        ops = np.pad(ops, pad)
-        addrs = np.pad(addrs, pad)
-    ops_bt = jnp.asarray(ops.transpose(0, 2, 1))     # [B, T, NC]
-    addrs_bt = jnp.asarray(addrs.transpose(0, 2, 1))
-    # group configs by static structure, preserving first-appearance order
-    order: dict = {}
-    for i, c in enumerate(cfgs):
-        order.setdefault(static_key(c), []).append(i)
-    groups = tuple(stack_configs([cfgs[i] for i in idx])
-                   for idx in order.values())
-    outs = _sweep_run(groups, ops_bt, addrs_bt, n_addr=n_addr)
-    # scatter group rows back to the input config order
-    flat_idx = [i for idx in order.values() for i in idx]
-    perm = np.argsort(flat_idx)
-    merged = jax.tree_util.tree_map(
-        lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0), *outs)
-    return jax.tree_util.tree_map(lambda x: x[perm], merged)
+    with obs.span("engine.sweep.pack", cat="engine", B=B, NC=NC):
+        T = _next_pow2(R)
+        if T != R:                           # pad with NOPs (no effect)
+            pad = ((0, 0), (0, 0), (0, T - R))
+            ops = np.pad(ops, pad)
+            addrs = np.pad(addrs, pad)
+        ops_bt = jnp.asarray(ops.transpose(0, 2, 1))     # [B, T, NC]
+        addrs_bt = jnp.asarray(addrs.transpose(0, 2, 1))
+        # group configs by static structure, first-appearance order
+        order: dict = {}
+        for i, c in enumerate(cfgs):
+            order.setdefault(static_key(c), []).append(i)
+        groups = tuple(stack_configs([cfgs[i] for i in idx])
+                       for idx in order.values())
+    with obs.span("engine.sweep.scan", cat="engine",
+                  n_groups=len(groups)):
+        outs = _sweep_run(groups, ops_bt, addrs_bt, n_addr=n_addr)
+        obs.fence(outs, "engine.sweep.device")
+    with obs.span("engine.sweep.decode", cat="engine"):
+        # scatter group rows back to the input config order
+        flat_idx = [i for idx in order.values() for i in idx]
+        perm = np.argsort(flat_idx)
+        merged = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0),
+            *outs)
+        return jax.tree_util.tree_map(lambda x: x[perm], merged)
 
 
 def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
@@ -364,7 +380,6 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
         read_val = jnp.where(l1_hit, l1_val,
                              jnp.where(l2_hit, l2_val,
                                        jnp.where(home_hit, home_val, mm_val)))
-        read_log = jnp.where(is_read, read_val, -1)
 
         # value that lands in caches on a write: the post-write version
         fill_val = jnp.where(is_write, mm_val, read_val)
@@ -506,6 +521,27 @@ def _make_round(cfg: SystemConfig, n_addr: int, with_log: bool = True):
                          lru=l2_lru_new, cts=l2_cts),
             l2_dirty=l2_dirty, tsu=tsu, mm_ver=mm_ver,
             dir_sharers=dir_sharers, time=time, ctr=ctr)
-        return new_st, (read_log if with_log else None)
+        if not with_log:
+            return new_st, None
+        # packed per-op result block, same [len(RES_FIELDS), lanes] layout
+        # the fabric miss pass emits (core.state.RES_FIELDS): one int32
+        # stack per round instead of a read-only log, so litmus/telemetry
+        # callers see WHERE a request was served (level), which lease it
+        # installed (wts/rts) and whether it reached main memory (mm_used).
+        lvl = jnp.where(l1_hit, 0,
+                        jnp.where(l2_hit, 1,
+                                  jnp.where(home_hit, 2, 3)))
+        i32 = lambda x: x.astype(jnp.int32)
+        res = jnp.stack([
+            i32(mem),                                        # found
+            jnp.where(is_read, read_val,                     # version
+                      jnp.where(is_write, mm_val, -1)),
+            jnp.full((NC,), -1, jnp.int32),                  # gseq (n/a)
+            jnp.where(is_read, lvl, -1),                     # level
+            jnp.where(mem, l1_lease.wts, -1),                # wts
+            jnp.where(mem, l1_lease.rts, -1),                # rts
+            i32(need_mm),                                    # mm_used
+        ])
+        return new_st, res
 
     return round_step

@@ -71,6 +71,21 @@ def link_bytes(l1_l2_msgs, l2_mm_msgs, inter_gpu_blocks, inval_msgs=0):
             inter_gpu_blocks * BLOCK_BYTES + inval_msgs * CTRL_BYTES)
 
 
+# ------------------------------------------------------ per-op result block
+# The packed per-op result record shared by the fabric's batched miss pass
+# (coherence/fabric/pipeline.py, [7, M]) and the simulator's round step
+# (core/engine.py, [7, NC] per round): field order is the layout contract
+# for the stacked int32 buffer both emit, so serving traces and figure
+# sweeps decode per-op results identically (ROADMAP miss-pass telemetry).
+#   found    1 iff the op produced/committed a value
+#   version  data version returned (reads) or committed (writes); -1 none
+#   gseq     payload write-sequence handle (fabric only; simulator: -1)
+#   level    read service level 0=L1 1=L2 2=peer/home 3=MM; -1 non-read
+#   wts/rts  the lease installed at the top tier (0 when none)
+#   mm_used  1 iff the op reached the MM/TSU authority
+RES_FIELDS = ("found", "version", "gseq", "level", "wts", "rts", "mm_used")
+
+
 # ----------------------------------------------------------------- states
 class TierState(NamedTuple):
     """One set-associative lease tier.

@@ -1,0 +1,119 @@
+"""Static cost probes: jaxpr collective accounting + compiled cost analysis.
+
+Runtime spans (``obs.trace``) answer *where wall-clock went*; this module
+answers *what the compiled program structurally does* — before it runs:
+
+  * ``jaxpr_collectives(jaxpr)`` — walk a (closed) jaxpr, including every
+    nested sub-jaxpr (scan/while/cond/pjit bodies), and count collective
+    primitives: total occurrences, how many sit inside a loop body (those
+    execute once PER ITERATION — the O(ops)-collectives failure mode the
+    batched grant pipeline removes), and a per-primitive breakdown.  This
+    is the generalization of ``pipeline.collective_counts`` (which now
+    delegates here; the parity suite's O(1)-per-batch pin is unchanged).
+  * ``cost_probe(fn, *args)`` — lower+compile a jittable and report XLA's
+    cost analysis (FLOPs, bytes accessed) alongside the jaxpr collective
+    counts, as one JSON-able dict.  Recorded next to the runtime rows in
+    BENCH_fabric.json so a perf regression can be split into "the program
+    got bigger" vs "the program got slower".
+
+Everything here is trace/compile time only — nothing is imported on the
+fabric hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+__all__ = ["COLLECTIVE_PRIMS", "LOOP_PRIMS", "jaxpr_collectives",
+           "cost_probe"]
+
+COLLECTIVE_PRIMS = ("all_gather", "all_to_all", "psum", "ppermute",
+                    "reduce_scatter")
+LOOP_PRIMS = ("scan", "while")
+
+
+def _sub_jaxprs(v):
+    if hasattr(v, "eqns"):                     # a Jaxpr
+        yield v
+    elif hasattr(v, "jaxpr"):                  # a ClosedJaxpr
+        yield v.jaxpr
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def jaxpr_collectives(jaxpr) -> Dict[str, Any]:
+    """Count collective primitives in a (closed) jaxpr.
+
+    Returns ``{"total", "in_loop", "by_primitive": {name: count},
+    "loops"}`` where ``in_loop`` counts collectives inside a scan/while
+    body (executed once per iteration) and ``loops`` is the number of
+    loop bodies encountered.  A collective's *per-batch* execution count
+    is ``total - in_loop + in_loop * iterations``."""
+    counts: Dict[str, Any] = {"total": 0, "in_loop": 0, "loops": 0,
+                              "by_primitive": {}}
+
+    def walk(jx, in_loop):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if any(c in name for c in COLLECTIVE_PRIMS):
+                counts["total"] += 1
+                counts["by_primitive"][name] = \
+                    counts["by_primitive"].get(name, 0) + 1
+                if in_loop:
+                    counts["in_loop"] += 1
+            is_loop = any(l in name for l in LOOP_PRIMS)
+            if is_loop:
+                counts["loops"] += 1
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    walk(sub, in_loop or is_loop)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, False)
+    return counts
+
+
+def _cost_analysis_dict(compiled) -> Optional[Dict[str, float]]:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: it has
+    returned a dict, a list of one dict per device, or None (backends
+    without HLO cost analysis)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:                          # pragma: no cover - backend
+        return None
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if isinstance(ca, dict) else None
+
+
+def cost_probe(fn, *args, donate_argnums=(), **kwargs) -> Dict[str, Any]:
+    """Lower + compile ``fn(*args, **kwargs)`` and report its static cost.
+
+    ``fn`` may be a plain function or an already-jitted callable (both
+    expose ``.lower`` after wrapping).  Returns::
+
+        {"flops": float|None, "bytes_accessed": float|None,
+         "collectives": jaxpr_collectives(...),
+         "output_bytes": float|None}
+
+    FLOPs/bytes come from XLA's compiled cost analysis and are ``None``
+    when the backend doesn't expose them; the collective counts always
+    come from the traced jaxpr (backend-independent).
+    """
+    jitted = fn if hasattr(fn, "lower") else jax.jit(
+        fn, donate_argnums=donate_argnums)
+    # make_jaxpr traces through jitted callables too (the pjit eqn's body
+    # is walked as a sub-jaxpr), so one path serves both input kinds
+    coll = jaxpr_collectives(jax.make_jaxpr(fn)(*args, **kwargs))
+    compiled = jitted.lower(*args, **kwargs).compile()
+    ca = _cost_analysis_dict(compiled)
+    flops = bytes_accessed = out_bytes = None
+    if ca:
+        flops = ca.get("flops")
+        out_bytes = ca.get("bytes accessed output")
+        # XLA reports per-operand keys 'bytes accessed operand N {}' plus a
+        # total 'bytes accessed'; prefer the total
+        bytes_accessed = ca.get("bytes accessed")
+    return {"flops": flops, "bytes_accessed": bytes_accessed,
+            "output_bytes": out_bytes, "collectives": coll}

@@ -32,6 +32,7 @@ import numpy as np
 from repro.coherence.fabric import FabricBackend, FabricConfig, default_fabric
 from repro.coherence.kv_lease import BatchedKVLease
 from repro.models import decode_step, init_cache, prefill
+from repro.obs import trace as obs
 from repro.sharding import NOSHARD
 
 
@@ -71,47 +72,60 @@ class Server:
                         leases: List) -> Dict[str, tuple]:
         """Prefill every missed prefix once; post ONE batched write-through."""
         filled: Dict[str, tuple] = {}
-        for key, hit in zip(keys, leases):
-            if hit is None and key not in filled:
-                prompts = prompts_by_key[key]
-                cache = init_cache(self.cfg, prompts.shape[0], self.max_len)
-                first, cache = self._prefill(self.params, cache,
-                                             jnp.asarray(prompts))
-                filled[key] = (cache, first)
+        with obs.span("serve.prefill", cat="serve"):
+            for key, hit in zip(keys, leases):
+                if hit is None and key not in filled:
+                    prompts = prompts_by_key[key]
+                    cache = init_cache(self.cfg, prompts.shape[0],
+                                       self.max_len)
+                    first, cache = self._prefill(self.params, cache,
+                                                 jnp.asarray(prompts))
+                    obs.fence(first, "serve.prefill.device")
+                    filled[key] = (cache, first)
         if filled:
-            self.kv.put_batch(list(filled.items()))
+            with obs.span("serve.put_batch", cat="serve",
+                          n_filled=len(filled)):
+                self.kv.put_batch(list(filled.items()))
         return filled
 
     def serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
+        with obs.span("serve", cat="serve", n_requests=len(requests)):
+            return self._serve(requests)
+
+    def _serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
         # group into decode batches, pad the last one
-        groups: List[List[Request]] = []
-        for i in range(0, len(requests), self.B):
-            group = requests[i:i + self.B]
-            while len(group) < self.B:
-                group.append(Request(rid=-1, prompt=group[0].prompt))
-            groups.append(group)
-        prompts = [np.stack([g.prompt for g in group]) for group in groups]
-        keys = [_prefix_key(p) for p in prompts]
+        with obs.span("serve.group", cat="serve"):
+            groups: List[List[Request]] = []
+            for i in range(0, len(requests), self.B):
+                group = requests[i:i + self.B]
+                while len(group) < self.B:
+                    group.append(Request(rid=-1, prompt=group[0].prompt))
+                groups.append(group)
+            prompts = [np.stack([g.prompt for g in group])
+                       for group in groups]
+            keys = [_prefix_key(p) for p in prompts]
         # ONE batched lease probe over the call's unique prefixes
-        uniq = list(dict.fromkeys(keys))
-        leases_u = dict(zip(uniq, self.kv.get_batch(uniq)))
-        leases = [leases_u[k] for k in keys]
+        with obs.span("serve.lease_probe", cat="serve", n_groups=len(keys)):
+            uniq = list(dict.fromkeys(keys))
+            leases_u = dict(zip(uniq, self.kv.get_batch(uniq)))
+            leases = [leases_u[k] for k in keys]
         filled = self._prefill_misses(keys, dict(zip(keys, prompts)), leases)
 
         out: Dict[int, np.ndarray] = {}
-        for group, pr, key, hit in zip(groups, prompts, keys, leases):
-            cache, nxt = hit[0] if hit is not None else filled[key]
-            S = pr.shape[1]
-            toks = [np.asarray(nxt)]
-            max_new = max(g.max_new for g in group)
-            for t in range(max_new - 1):
-                nxt, cache = self._decode(self.params, cache, nxt[:, None],
-                                          jnp.int32(S + t))
-                toks.append(np.asarray(nxt))
-            gen = np.stack(toks, 1)                    # [B, max_new]
-            for j, g in enumerate(group):
-                if g.rid >= 0:
-                    out[g.rid] = gen[j, :g.max_new]
+        with obs.span("serve.decode", cat="serve"):
+            for group, pr, key, hit in zip(groups, prompts, keys, leases):
+                cache, nxt = hit[0] if hit is not None else filled[key]
+                S = pr.shape[1]
+                toks = [np.asarray(nxt)]
+                max_new = max(g.max_new for g in group)
+                for t in range(max_new - 1):
+                    nxt, cache = self._decode(self.params, cache,
+                                              nxt[:, None], jnp.int32(S + t))
+                    toks.append(np.asarray(nxt))
+                gen = np.stack(toks, 1)                # [B, max_new]
+                for j, g in enumerate(group):
+                    if g.rid >= 0:
+                        out[g.rid] = gen[j, :g.max_new]
         return out
 
     @property

@@ -1,0 +1,263 @@
+"""Observability layer acceptance (DESIGN.md §10).
+
+Four contracts:
+
+  * histogram percentiles are numpy-exact while samples are retained and
+    a sane bucket interpolation past the cap;
+  * the registry's snapshot/delta windows tile FabricStats counters
+    without gaps or double counting;
+  * a REAL traced fabric batch exports schema-valid Chrome-trace JSON
+    whose spans form a well-nested forest (strict stack discipline);
+  * the <1% gate: with tracing disabled (the default), the span
+    instrumentation left on the batched serving hot path costs under 1%
+    of a serving batch — the paper's own overhead bar (§6.2) applied to
+    our own telemetry.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.coherence.fabric import ArrayFabric, FabricConfig
+from repro.obs import LatencyHistogram, MetricsRegistry
+from repro.obs import trace as obs_trace
+from repro.obs.xprof import cost_probe, jaxpr_collectives
+
+
+# ------------------------------------------------------------- histograms
+def test_percentiles_match_numpy_exactly():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-7.0, sigma=2.0, size=4096)  # ~µs..s
+    h = LatencyHistogram()
+    h.record_many(samples)
+    assert h.exact
+    for p in (0, 10, 50, 90, 95, 99, 99.9, 100):
+        np.testing.assert_allclose(h.percentile(p),
+                                   np.percentile(samples, p),
+                                   rtol=0, atol=0, err_msg=f"p{p}")
+    s = h.summary()
+    assert s["count"] == len(samples) and s["exact"]
+    np.testing.assert_allclose(s["p99_us"],
+                               round(np.percentile(samples, 99) * 1e6, 2))
+
+
+def test_percentiles_degrade_to_bucket_interpolation_past_cap():
+    rng = np.random.default_rng(1)
+    samples = rng.lognormal(mean=-9.0, sigma=1.0, size=512)
+    h = LatencyHistogram(sample_cap=64)
+    h.record_many(samples)
+    assert not h.exact and not h.summary()["exact"]
+    exact = np.percentile(samples, 95)
+    est = h.percentile(95)
+    # log-bucket estimate lands within one growth factor of the truth
+    assert exact / 2.0 <= est <= exact * 2.0
+    rows = h.buckets()
+    assert rows[-1] == (float("inf"), len(samples))
+    cum = [c for _, c in rows]
+    assert cum == sorted(cum)                      # cumulative, monotone
+
+
+def test_histogram_validation_and_merge():
+    h = LatencyHistogram()
+    with pytest.raises(ValueError):
+        h.record(-1e-3)
+    a = LatencyHistogram().record_many([1e-3, 2e-3])
+    b = LatencyHistogram().record_many([4e-3])
+    a.merge(b)
+    assert a.count == 3 and a.max_s == 4e-3
+    with pytest.raises(ValueError):
+        a.merge(LatencyHistogram(base=1e-3))
+
+
+# --------------------------------------------------------------- registry
+def test_registry_deltas_tile_the_counter_timeline():
+    reg = MetricsRegistry()
+    key = ("fabric", "shared_prefix")
+    reg.snapshot(key, {"reads": 10, "writes": 2})
+    d1 = reg.delta(key, {"reads": 25, "writes": 2})
+    assert d1 == {"reads": 15, "writes": 0}
+    d2 = reg.delta(key, {"reads": 30, "writes": 7})   # advanced: no overlap
+    assert d2 == {"reads": 5, "writes": 5}
+    # advance=False peeks without moving the window
+    d3 = reg.delta(key, {"reads": 31, "writes": 7}, advance=False)
+    d4 = reg.delta(key, {"reads": 31, "writes": 7})
+    assert d3 == d4 == {"reads": 1, "writes": 0}
+    # a key with no snapshot diffs against zero
+    assert reg.delta(("other",), {"reads": 3}) == {"reads": 3}
+
+
+def test_registry_accepts_fabric_backends_and_summarizes():
+    fab = ArrayFabric(FabricConfig(n_shards=2, rd_lease=4, wr_lease=2))
+    reg = MetricsRegistry()
+    key = ("array", "smoke")
+    reg.snapshot(key, fab)                         # .stats() surface
+    fab.write("k", "v")
+    fab.read("k")
+    d = reg.delta(key, fab)
+    assert d["reads"] == 1 and d["writes"] == 1
+    reg.observe(key, "total", 2e-3)
+    s = reg.summary()["array/smoke"]
+    assert s["latency"]["total"]["count"] == 1
+    assert s["counters"]["reads"] == fab.stats()["reads"]
+
+
+# ------------------------------------------------------- trace well-formed
+def _traced_fabric_batch():
+    """Run one miss-heavy + one all-hit batch under a scoped tracer."""
+    fab = ArrayFabric(FabricConfig(n_shards=4, rd_lease=8, wr_lease=4))
+    hot = [f"k/{i}" for i in range(32)]
+    fab.write_batch([(k, f"{k}@0") for k in hot], replica=0)
+    fab.fence()
+    tr = obs_trace.Tracer(enabled=True)
+    old = obs_trace.set_tracer(tr)
+    try:
+        fab.read_batch(hot, replica=1)             # misses -> miss pass
+        fab.read_batch(hot, replica=1)             # all-hit fast path
+    finally:
+        obs_trace.set_tracer(old)
+    return tr
+
+
+def test_trace_spans_form_a_wellnested_forest():
+    tr = _traced_fabric_batch()
+    names = {e[0] for e in tr.events}
+    assert {"fabric.pack", "fabric.fast_probe", "fabric.decode",
+            "fabric.miss_pass", "fabric.scan",
+            "fabric.scan.device"} <= names
+    # per-thread, spans nest strictly: sweep by start time with a stack
+    # of (start, end) — every span lies inside its enclosing one
+    by_tid = {}
+    for name, _cat, tid, t0, dur, _depth, _args in tr.events:
+        by_tid.setdefault(tid, []).append((t0, t0 + dur, name))
+    for spans in by_tid.values():
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack = []
+        for t0, t1, name in spans:
+            while stack and t0 >= stack[-1][1]:
+                stack.pop()
+            assert not stack or t1 <= stack[-1][1], \
+                f"{name} crosses its parent"
+            stack.append((t0, t1))
+
+
+def test_trace_exports_valid_chrome_json(tmp_path):
+    tr = _traced_fabric_batch()
+    path = tr.export(tmp_path / "trace.json")
+    blob = json.loads(path.read_text())
+    assert blob["displayTimeUnit"] == "ms"
+    events = blob["traceEvents"]
+    assert events, "no events exported"
+    for ev in events:
+        assert ev["ph"] == "X"                     # complete events
+        assert isinstance(ev["name"], str) and isinstance(ev["cat"], str)
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        assert isinstance(ev["ts"], float) and ev["ts"] >= 0
+        assert isinstance(ev["dur"], float) and ev["dur"] >= 0
+        assert set(ev) <= {"name", "cat", "ph", "ts", "dur", "pid",
+                           "tid", "args"}
+    # the device-execute child sits inside its dispatch span
+    scans = [e for e in events if e["name"] == "fabric.scan"]
+    fences = [e for e in events if e["name"] == "fabric.scan.device"]
+    assert scans and fences
+    s, f = scans[0], fences[0]
+    assert s["ts"] <= f["ts"] and \
+        f["ts"] + f["dur"] <= s["ts"] + s["dur"] + 1e-3
+
+
+def test_disabled_tracing_records_nothing_and_passes_values():
+    tr = obs_trace.Tracer(enabled=False)
+    old = obs_trace.set_tracer(tr)
+    try:
+        with obs_trace.span("x"):
+            pass
+        sentinel = object()
+        assert obs_trace.fence(sentinel) is sentinel
+        obs_trace.instant("y")
+    finally:
+        obs_trace.set_tracer(old)
+    assert tr.events == []
+
+
+# --------------------------------------------------------- <1% overhead gate
+def test_disabled_overhead_under_one_percent_of_serving_batch():
+    """The acceptance gate: spans-per-batch on the batched serving path
+    x the measured cost of one DISABLED span < 1% of the batch's p50.
+    (Methodology in DESIGN.md §10 — the uninstrumented build no longer
+    exists to A/B against, and this decomposition is noise-immune.)"""
+    cfg = FabricConfig(n_shards=4, rd_lease=64, wr_lease=4,
+                       replica_sets=512, replica_ways=8,
+                       shared_sets=1024, shared_ways=8)
+    fab = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    hot = [f"prefix/{i}" for i in range(2048)]
+    fab.write_batch([(k, f"{k}@0") for k in hot], replica=0)
+    fab.fence()
+    fab.read_batch(hot, replica=1)                 # fill + compile
+    h = LatencyHistogram()
+    import time
+    for _ in range(12):
+        t0 = time.perf_counter()
+        fab.read_batch(hot, replica=1)             # all-hit steady state
+        h.record(time.perf_counter() - t0)
+    p50_us = h.summary()["p50_us"]
+    # count the spans this exact path executes
+    tr = obs_trace.Tracer(enabled=True)
+    old = obs_trace.set_tracer(tr)
+    try:
+        fab.read_batch(hot, replica=1)
+    finally:
+        obs_trace.set_tracer(old)
+    spans = len(tr.events)
+    assert spans >= 4                              # pack/probe/donate/decode
+    span_ns = obs_trace.disabled_span_cost_ns()
+    overhead_pct = 100.0 * (spans * span_ns / 1e3) / p50_us
+    assert overhead_pct < 1.0, (
+        f"{spans} spans x {span_ns:.0f}ns = "
+        f"{spans * span_ns / 1e3:.1f}us on a {p50_us:.0f}us batch "
+        f"({overhead_pct:.2f}% > 1%)")
+
+
+# ------------------------------------------------------------------ xprof
+def test_jaxpr_collectives_counts_loop_bodies():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec
+
+    from repro.sharding import shard_map
+
+    def body(c, x):
+        return c + jax.lax.psum(x, "i"), x
+
+    def fn(xs):
+        c, _ = jax.lax.scan(body, jnp.float32(0), xs)
+        return c + jax.lax.psum(c, "i")
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("i",))
+    jaxpr = jax.make_jaxpr(
+        shard_map(fn, mesh, in_specs=PartitionSpec("i"),
+                  out_specs=PartitionSpec(), check_vma=False)
+    )(jnp.ones((8,), jnp.float32))
+    c = jaxpr_collectives(jaxpr)
+    assert c["total"] == 2 and c["in_loop"] == 1 and c["loops"] >= 1
+    assert sum(c["by_primitive"].values()) == c["total"]
+
+    # pipeline.collective_counts now delegates here: same numbers
+    from repro.coherence.fabric.pipeline import collective_counts
+    legacy = collective_counts(jaxpr)
+    assert legacy == {"total": c["total"], "in_loop": c["in_loop"]}
+
+
+def test_cost_probe_reports_structure_and_cost():
+    import jax.numpy as jnp
+
+    def fn(a, b):
+        return a @ b
+
+    a = jnp.ones((64, 64), jnp.float32)
+    probe = cost_probe(fn, a, a)
+    assert probe["collectives"]["total"] == 0
+    # XLA's cost analysis is backend-dependent; when present it must see
+    # the matmul's FLOPs
+    if probe["flops"] is not None:
+        assert probe["flops"] >= 2 * 64 ** 3 * 0.9
+    if probe["bytes_accessed"] is not None:
+        assert probe["bytes_accessed"] > 0

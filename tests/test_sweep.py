@@ -120,3 +120,34 @@ def test_fig10_byte_counters_decompose(batch):
 def test_stack_configs_rejects_mixed_structure():
     with pytest.raises(ValueError):
         stack_configs([sm_wt_halcone(**KW), sm_wt_nc(**KW)])
+
+
+def test_simulate_res_log_block(batch):
+    """The round step emits the packed per-op result block
+    (core.state.RES_FIELDS, the same layout the fabric miss pass uses):
+    read_log is exactly its version field masked to reads, found mirrors
+    the memory ops, level only annotates reads, and mm_used implies a
+    trip past both cache tiers (level == 3 wherever a read used MM)."""
+    from repro.core.engine import READ, WRITE
+    from repro.core.state import RES_FIELDS
+
+    tl, _ = batch
+    ops, addrs = tl[1]
+    r = simulate(sm_wt_halcone(**KW), ops, addrs)
+    fields = r["res_log"]
+    assert tuple(fields) == RES_FIELDS
+    for name in RES_FIELDS:
+        assert fields[name].shape == ops.shape, name
+    np.testing.assert_array_equal(
+        np.asarray(r["read_log"]),
+        np.where(ops == READ, fields["version"], -1))
+    np.testing.assert_array_equal(
+        fields["found"].astype(bool), (ops == READ) | (ops == WRITE))
+    assert (fields["level"][ops != READ] == -1).all()
+    read_levels = fields["level"][ops == READ]
+    assert ((read_levels >= 0) & (read_levels <= 3)).all()
+    mm_reads = (fields["mm_used"] == 1) & (ops == READ)
+    assert (fields["level"][mm_reads] == 3).all()
+    assert (fields["gseq"] == -1).all()      # no payload seq in the sim
+    # leases only annotate memory ops
+    assert (fields["rts"][(ops != READ) & (ops != WRITE)] == -1).all()
