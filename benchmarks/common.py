@@ -67,6 +67,14 @@ def _fingerprint(fn: Callable, script: Optional[str] = None) -> str:
         # invalidate cached artifacts too
         paths.append(pathlib.Path(repro.sharding.__file__))
         paths.append(pathlib.Path(repro.launch.mesh.__file__))
+        # the write-bench rows (batched_writes) depend on the transition
+        # rules in core/state.py and the host queue in fabric/writeq.py;
+        # both are already inside the package globs above, but pin the
+        # two files explicitly so the cached rows keep self-invalidating
+        # even if the glob set is ever narrowed
+        paths.append(pathlib.Path(repro.core.__file__).parent / "state.py")
+        paths.append(pathlib.Path(repro.coherence.fabric.__file__).parent
+                     / "writeq.py")
     except ImportError:
         pass
     h = hashlib.sha256()

@@ -41,6 +41,13 @@ plus the array-native headline (DESIGN.md §7):
                     O(batch) for the scan schedule (the acceptance pin,
                     as a recorded number).
 
+  batched_writes  — republish STORMS through the batched write pass
+                    (DESIGN.md §11): every batch re-publishes hot
+                    prefixes via ``write_batch``, timed against the
+                    per-op scan schedule on identical streams (stats
+                    asserted equal, fences untimed), plus the write
+                    pass's structural one-collective-per-storm count.
+
 Results land in benchmarks/artifacts AND a root-level ``BENCH_fabric.json``
 (the repo's perf trajectory file: batched vs host ops/sec + sweep wall).
 
@@ -377,6 +384,87 @@ def scenario_batched_grants(n_shards: int = 8, batch: int = 512,
     return out
 
 
+def scenario_batched_writes(ops: int = 8192, n_hot: int = 512,
+                            batch: int = 512) -> dict:
+    """Republish storms through the batched write pass vs the per-op
+    scan schedule (DESIGN.md §11): every storm re-publishes ``batch``
+    hot prefixes via one ``write_batch`` call on IDENTICAL streams.
+    Only the ``write_batch`` call is timed — the fence that drains the
+    posted tail runs untimed between storms — and the two pipelines'
+    stats blocks are asserted equal afterwards (same protocol, only the
+    execution schedule differs).  The wide geometry (64 shards, roomy
+    tiers) keeps the storms conflict-light, so the batched pass runs
+    genuinely vectorized rounds; ``write_pass_collectives`` records the
+    structural pin that one sharded storm issues exactly ONE packed
+    collective (the scan body keeps one per op)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.obs.xprof import jaxpr_collectives
+
+    cfg = FabricConfig(n_shards=64, rd_lease=8, wr_lease=4,
+                       max_in_flight=8, replica_sets=2048, replica_ways=8,
+                       shared_sets=4096, shared_ways=8)
+    hot = [f"prefix/{i}" for i in range(n_hot)]
+    n_batches = max(4, ops // batch)
+    rng = np.random.default_rng(3)
+    storms = [[(hot[i], f"v@{t}.{i}")
+               for i in rng.permutation(n_hot)[:batch]]
+              for t in range(n_batches)]
+
+    def bench(pipe):
+        fab = ArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                          pipeline=pipe)
+        for items in storms[:2]:        # compile + steady-state warm
+            fab.write_batch(items, replica=0)
+            fab.fence()
+        walls = []
+        for items in storms[2:]:
+            t0 = time.time()
+            fab.write_batch(items, replica=0)
+            walls.append(time.time() - t0)
+            fab.fence()                 # untimed drain between storms
+        p50_s, row = _batch_latency(walls)
+        return fab, p50_s, row
+
+    scan_fab, scan_s, scan_row = bench("scan")
+    bat_fab, bat_s, bat_row = bench("batched")
+    assert scan_fab.stats() == bat_fab.stats(), \
+        "batched write pass diverged from the op-scan"
+
+    # structural collective accounting for one sharded publish storm
+    sh = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                            pipeline="batched")
+    z = jnp.zeros((batch,), jnp.int32)
+    s0 = jnp.int32(0)
+    cw = jaxpr_collectives(jax.make_jaxpr(sh._write_run)(
+        sh._af, z, z, z, z, jnp.zeros((8, batch), bool), s0, s0,
+        jnp.int32(-1), jnp.int32(cfg.rd_lease), jnp.int32(cfg.wr_lease)))
+    sc = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
+                            pipeline="scan")
+    xs = {k: jnp.zeros((batch,), jnp.int32) for k in
+          ("kind", "rep", "node", "key", "set1", "set2", "shard", "wl")}
+    cs = jaxpr_collectives(jax.make_jaxpr(sc._run)(
+        sc._af, xs, jnp.int32(cfg.rd_lease), jnp.int32(cfg.wr_lease)))
+    speedup = round(scan_s / bat_s, 2)
+    return {
+        "ops": (n_batches - 2) * batch, "batch": batch, "n_hot": n_hot,
+        "n_shards": cfg.n_shards,
+        "scan_us_per_op": round(scan_s / batch * 1e6, 2),
+        "batched_us_per_op": round(bat_s / batch * 1e6, 2),
+        "batched_speedup": speedup,
+        "bar_2x_met": speedup >= 2.0,
+        "scan_batch_us": scan_row,
+        "batched_batch_us": bat_row,
+        "write_pass_collectives": {
+            "batched_per_storm": (cw["total"] - cw["in_loop"]
+                                  + cw["in_loop"] * batch),
+            "scan_per_storm": (cs["total"] - cs["in_loop"]
+                               + cs["in_loop"] * batch),
+        },
+    }
+
+
 def scenario_sharded_serving(ops: int = 8192, n_hot: int = 256,
                              batch: int = 1024, n_shards: int = 8) -> dict:
     """The mesh-placed fabric on a MISS-HEAVY serving stream (every read
@@ -478,11 +566,13 @@ def _bench_meta(sharded: dict) -> dict:
 
 
 def write_bench_json(sweep_wall_s: float, serving: dict, sharded: dict,
-                     scan_path: dict = None, grants: dict = None) -> None:
+                     scan_path: dict = None, grants: dict = None,
+                     writes: dict = None) -> None:
     """Root-level perf-trajectory artifact (ISSUE 3 satellite): the
     batched-vs-host ops/sec headline, the sharded-serving row (ISSUE 4),
     the scan-vs-batched-pipeline row + per-batch collective counts
-    (ISSUE 5), and the lease-sweep wall-clock."""
+    (ISSUE 5), the republish-storm write-path row (ISSUE 7), and the
+    lease-sweep wall-clock."""
     blob = {
         "batched_serving": serving,
         "sharded_serving": sharded,
@@ -495,6 +585,8 @@ def write_bench_json(sweep_wall_s: float, serving: dict, sharded: dict,
         blob["scan_path"] = scan_path
     if grants is not None:
         blob["batched_grants"] = grants
+    if writes is not None:
+        blob["batched_writes"] = writes
     BENCH_PATH.write_text(json.dumps(blob, indent=1))
     print(f"wrote {BENCH_PATH}", file=sys.stderr)
 
@@ -527,6 +619,9 @@ def run(force: bool = False, mini: bool = False) -> None:
             ops=2048 if mini else 8192, n_hot=256 if mini else 512,
             batch=128 if mini else 256)
         out["_batched_grants"] = scenario_batched_grants(
+            batch=128 if mini else 512)
+        out["_batched_writes"] = scenario_batched_writes(
+            ops=2048 if mini else 8192, n_hot=256 if mini else 512,
             batch=128 if mini else 512)
         return out
 
@@ -563,7 +658,13 @@ def run(force: bool = False, mini: bool = False) -> None:
                 f"batched_per_batch="
                 f"{grt['batched']['collectives_per_batch']};"
                 f"scan_per_batch={grt['scan']['collectives_per_batch']}")
-    write_bench_json(out["_sweep_wall_s"], srv, shd, scp, grt)
+    wrt = out["_batched_writes"]
+    common.emit("fabric/batched_writes", wrt["batched_us_per_op"],
+                f"scan_us={wrt['scan_us_per_op']};"
+                f"speedup={wrt['batched_speedup']}x;"
+                f"write_pass_collectives="
+                f"{wrt['write_pass_collectives']['batched_per_storm']}")
+    write_bench_json(out["_sweep_wall_s"], srv, shd, scp, grt, wrt)
 
 
 def merge_sharded_row(ops: int) -> None:
@@ -683,7 +784,14 @@ def main():
         print(f"batched_grants per-batch collectives: "
               f"batched={grt['batched']['collectives_per_batch']} "
               f"scan={grt['scan']['collectives_per_batch']}", flush=True)
-        write_bench_json(sweep_wall, srv, shd, scp, grt)
+        wrt = scenario_batched_writes(ops=max(2048, min(args.ops * 2, 8192)))
+        out["batched_writes"] = wrt
+        print(f"batched_writes scan={wrt['scan_us_per_op']}us/op "
+              f"batched={wrt['batched_us_per_op']}us/op "
+              f"({wrt['batched_speedup']}x; one-collective storm="
+              f"{wrt['write_pass_collectives']['batched_per_storm']})",
+              flush=True)
+        write_bench_json(sweep_wall, srv, shd, scp, grt, wrt)
     out["_meta"] = {"ops": args.ops, "lease_grid": LEASE_GRID,
                     "wall_s": round(time.time() - t0, 2)}
     args.json.parent.mkdir(parents=True, exist_ok=True)

@@ -716,6 +716,31 @@ def _build_miss_run(W1, W2, KS, MESH=None):
         out_specs=(af_spec, P()), check_vma=False), donate_argnums=0)
 
 
+@functools.lru_cache(maxsize=32)
+def _build_write_run(W1, W2, KS, NN, NR, Q, MAXIF, MESH=None):
+    """The batched write pass, jitted: ALL conflict-free rounds of a
+    posted-write batch in one call (``pipeline.make_write_pass`` — one
+    ``lax.scan`` over the round masks, the fabric state donated), each
+    round serving its pending installs, ring pushes and queue drains with
+    batched probes, ONE batched TSU write-through grant
+    (``state.tsu_commit_write_batch``) and prefix-sum clock/LRU sequencing
+    (DESIGN.md §11).
+
+    With ``MESH`` the pass runs under the batched grant pipeline's
+    collective schedule (``_shard_exchange``): the packed TSU buffer is
+    assembled with ONE ``owner_gather`` per ``write_batch`` — OUTSIDE the
+    round scan — so a republish storm costs O(1) collectives no matter
+    how many writes or rounds."""
+    fn = P_.make_write_pass(W1, W2, KS, NN, NR, Q, MAXIF)
+    if MESH is None:
+        return jax.jit(fn, donate_argnums=0)
+    af_spec = _af_pspecs()
+    return jax.jit(shard_map(
+        _shard_exchange(fn, KS, int(MESH.devices.size)), MESH,
+        in_specs=(af_spec,) + (P(),) * 10,
+        out_specs=(af_spec, P()), check_vma=False), donate_argnums=0)
+
+
 class ArrayFabric(FabricBackend):
     """The array-native fabric: ``FabricBackend`` over one jitted op-scan.
 
@@ -760,6 +785,11 @@ class ArrayFabric(FabricBackend):
         self._miss_run = (_build_miss_run(self._W1, self._W2, self._KS,
                                           mesh)
                           if pipeline == "batched" else None)
+        self._write_run = (_build_write_run(self._W1, self._W2, self._KS,
+                                            n_nodes, self.n_replicas,
+                                            self._Q, cfg.max_in_flight,
+                                            mesh)
+                           if pipeline == "batched" else None)
         self._af = self._init_af()
         # host-side payload plumbing (the arrays decide; this only ships)
         self._keys: Dict = {}
@@ -775,6 +805,7 @@ class ArrayFabric(FabricBackend):
         self._fast_read = _build_fast_read(self.mesh)
         self._meta_dev = None           # device-side kid -> set1 table
         self._fast_read_batches = 0     # all-hit batches (FabricStats field)
+        self._write_batches = 0         # non-empty write_batch calls
         self._writes_since_prune = 0
 
     def _init_af(self) -> _AF:
@@ -1082,6 +1113,84 @@ class ArrayFabric(FabricBackend):
                                              fields["gseq"][j]))
         return out
 
+    def _note_write_batch(self) -> None:
+        self._write_batches += 1
+
+    def write_batch(self, items, replica: int = 0, wr_lease=None) -> None:
+        """Batched posted writes (backend contract), vectorized: the whole
+        storm runs through the batched write pass (DESIGN.md §11) —
+        conflict-free rounds (``pipeline.write_rounds``, drain schedule
+        included), ONE batched TSU write-through grant per round, and on
+        the sharded fabric ONE packed collective per batch — falling back
+        to the exact op-scan under ``pipeline="scan"`` or when the batch
+        is so conflict-ridden the round budget
+        (``max(_MIN_ROUND_BUDGET, writes // 2)``) is blown."""
+        items = list(items)
+        if not items:
+            return
+        self._note_write_batch()
+        served = False
+        if self._write_run is not None:
+            with obs.span("fabric.write_pass", n_ops=len(items)):
+                served = self._write_batch_batched(items, replica, wr_lease)
+        if not served:
+            self.apply([Op("write", k, v, replica=replica,
+                           wr_lease=wr_lease) for k, v in items])
+
+    def _write_batch_batched(self, items, replica, wr_lease) -> bool:
+        """Serve a posted-write batch with the vectorized write pass:
+        split into conflict-free rounds (the host-side drain-schedule
+        simulation in ``pipeline.write_rounds``), run all rounds as ONE
+        jitted pass over the padded batch, then replay the returned drain
+        log — payload handoffs and grant-log appends — in op order via
+        the op-scan's own ``_drains`` decoder.  Returns False to signal
+        the op-scan fallback when the batch is too conflict-ridden."""
+        B = len(items)
+        node = replica // self._rpn
+        with obs.span("fabric.pack", n_ops=B):
+            kids = np.asarray([self._kid(k) for k, _ in items], np.int32)
+            meta = self._meta[kids]
+            pending = [(k, *self._meta[k].tolist(), r)
+                       for k, _, r in self._qmirror[node]]
+            rounds = P_.write_rounds(kids, meta[:, 0], meta[:, 1],
+                                     meta[:, 2], replica, pending,
+                                     self.cfg.max_in_flight)
+            if len(rounds) > max(_MIN_ROUND_BUDGET, B // 2):
+                return False
+            M = max(32, _next_pow2(B))
+            R = max(4, _next_pow2(len(rounds)))
+            pad = lambda a: np.pad(a.astype(np.int32), (0, M - B))
+            masks = P_.round_masks(rounds, R, M)
+            wl = -1 if wr_lease is None else wr_lease
+        with obs.span("fabric.exchange", lanes=M, rounds=R):
+            args = (jnp.asarray(pad(kids)), jnp.asarray(pad(meta[:, 0])),
+                    jnp.asarray(pad(meta[:, 1])),
+                    jnp.asarray(pad(meta[:, 2])), jnp.asarray(masks))
+        with obs.span("fabric.scan", n_ops=B):
+            self._af, res = self._write_run(
+                self._af, *args, np.int32(replica), np.int32(node),
+                jnp.int32(wl), jnp.int32(self.cfg.rd_lease),
+                jnp.int32(self.cfg.wr_lease))
+            obs.fence(res, "fabric.scan.device")
+        with obs.span("fabric.decode", n_ops=B):
+            res = np.asarray(jax.device_get(res))  # packed [6, M] block
+            f = dict(zip(P_.WRITE_RES_FIELDS, res))
+            # the drain decoder reads per-op drain-log ROWS; a write op
+            # drains at most once, so each lane is a one-column row
+            rd = {"dcount": f["dcount"]}
+            rd.update({k: f[k][:, None] for k in P_.WRITE_RES_FIELDS[1:]})
+            for i, (k, v) in enumerate(items):
+                kid = int(kids[i])
+                self._pending[(replica, kid)] = v
+                self._pending_n[(replica, kid)] = self._pending_n.get(
+                    (replica, kid), 0) + 1
+                self._qmirror[node].append((kid, v, replica))
+                self._drains(rd, i, node=node)
+        if self._writes_since_prune >= _PRUNE_EVERY:
+            with obs.span("fabric.donate"):
+                self.prune_payloads()
+        return True
+
     # ------------------------------------------------------------ scalar
     def read(self, key, replica: int = 0):
         return self.apply([Op("read", key, replica=replica)])[0][1]
@@ -1129,6 +1238,7 @@ class ArrayFabric(FabricBackend):
         out["wb_evictions"] = 0
         out["inval_msgs"] = 0
         out["fast_read_batches"] = self._fast_read_batches
+        out["write_batches"] = self._write_batches
         return out
 
     def replica_stats(self, replica: int = 0) -> Dict[str, int]:

@@ -144,8 +144,22 @@ class FabricBackend(abc.ABC):
 
     def write_batch(self, items: Sequence[Tuple[Any, Any]],
                     replica: int = 0, wr_lease: Optional[int] = None) -> None:
+        """Batched posted writes: ONE batch boundary (a single ``apply``
+        call — never a per-item loop), so backends that batch the write
+        path (``ArrayFabric``'s vectorized write pass, DESIGN.md §11) see
+        the whole storm at once.  Every non-empty batch bumps the
+        ``write_batches`` stats field on every backend, mirroring
+        ``fast_read_batches``, so host/array stats-equality assertions
+        cover the write path's batch boundary too."""
+        items = list(items)
+        if not items:
+            return
+        self._note_write_batch()
         self.apply([Op("write", k, v, replica=replica, wr_lease=wr_lease)
                     for k, v in items])
+
+    def _note_write_batch(self) -> None:
+        """Record a posted-write batch in this backend's stats block."""
 
     def apply(self, ops: Sequence[Op]) -> List[Tuple[Op, Any]]:
         """Run an op trace; returns [(op, result)] in order.  The base
@@ -214,6 +228,9 @@ class HostFabric(FabricBackend):
     # ------------------------------------------------------------- ops
     def _note_fast_read_batch(self) -> None:
         self.fabric.stats.bump("fast_read_batches")
+
+    def _note_write_batch(self) -> None:
+        self.fabric.stats.bump("write_batches")
 
     def peek(self, key, replica: int = 0) -> bool:
         return self.replicas[replica].peek(key)

@@ -48,6 +48,7 @@ both read it.
 """
 from __future__ import annotations
 
+import collections
 from typing import List
 
 import jax
@@ -265,6 +266,314 @@ def make_miss_pass(W1: int, W2: int, KS: int):
             af, out = carry
             return round_body(af, out, act, kids, s1, s2, shard, rep,
                               node, rd, wr), None
+
+        (af, out), _ = jax.lax.scan(step, (af, out0), masks)
+        return af, out
+
+    return pass_
+
+
+# ------------------------------------------------------ batched write pass
+# The packed per-op result block of the write pass ([6, M] int32): each op
+# is a posted write, so the only externally visible output is its drain —
+# dcount (0/1) plus the drained grant's key/version/lease/gseq, exactly the
+# op-scan's dlog_* record restricted to the one-drain-per-write case.
+WRITE_RES_FIELDS = ("dcount", "dlog_key", "dlog_ver", "dlog_wts",
+                    "dlog_rts", "dlog_gseq")
+
+
+def write_rounds(kids, s1, s2, shard, rep, pending, maxif):
+    """Split a write batch (op order) into conflict-free rounds for the
+    batched write pass, simulating the bounded ring's drain schedule.
+
+    Each op posts a pending line into the submitting replica's tier
+    (footprint: its key + its ``(rep, s1)`` set) and, when the queue
+    exceeds ``maxif``, drains the queue HEAD — which touches the drained
+    entry's TSU shard, its ``(node, s2)`` shared set, and (for entries
+    queued before this round) its key + ``(drep, s1)`` replica set.  A
+    round must keep all of these disjoint, with two write-specific rules:
+
+      * at most one TSU write per shard per round — a second allocation
+        in one shard is coupled to the first through the victim choice
+        and the allocation sequencer (``state.tsu_commit_write_batch``'s
+        contract);
+      * a drain of an entry PUSHED EARLIER IN THIS ROUND is exempt from
+        the key/replica-set check: its footprint was already claimed by
+        the push, and the pass applies every pending install before any
+        drain install, so the drain re-probes the pending line exactly
+        as the sequential scan would.
+
+    ``pending`` is the node's queue at batch start, oldest first, as
+    ``(kid, s1, s2, shard, rep)`` tuples; ``rep`` the submitting
+    replica.  Returns index arrays into the batch; concatenated they are
+    ``range(len(kids))`` — rounds never reorder ops."""
+    q = collections.deque(pending)
+    q_round = collections.deque(-1 for _ in pending)   # round each entry
+    rounds: List[np.ndarray] = []                      # was pushed in
+    cur: List[int] = []
+    seen_k, seen_1, seen_2, seen_sh = set(), set(), set(), set()
+    r = 0
+    kids, s1, s2, shard = (np.asarray(kids).tolist(), np.asarray(s1).tolist(),
+                           np.asarray(s2).tolist(),
+                           np.asarray(shard).tolist())
+    for i, (k, a, b, sh) in enumerate(zip(kids, s1, s2, shard)):
+        q.append((k, a, b, sh, rep))
+        q_round.append(r)
+        drain = len(q) > maxif
+        e = q[0] if drain else None
+
+        def footprint():
+            fk, f1, f2, fsh = {k}, {(rep, a)}, set(), set()
+            if drain:
+                fsh.add(e[3])
+                f2.add(e[2])
+                if q_round[0] != r:        # not a same-round push: check
+                    fk.add(e[0])           # the drained key + replica set
+                    f1.add((e[4], e[1]))
+            return fk, f1, f2, fsh
+
+        fk, f1, f2, fsh = footprint()
+        if (fk & seen_k) or (f1 & seen_1) or (f2 & seen_2) \
+                or (fsh & seen_sh):
+            rounds.append(np.asarray(cur, np.int64))
+            cur = []
+            seen_k, seen_1, seen_2, seen_sh = set(), set(), set(), set()
+            r += 1
+            q_round[-1] = r                # this push belongs to the new
+            fk, f1, f2, fsh = footprint()  # round; exemption recomputed
+        cur.append(i)
+        seen_k |= fk
+        seen_1 |= f1
+        seen_2 |= f2
+        seen_sh |= fsh
+        if drain:
+            q.popleft()
+            q_round.popleft()
+    rounds.append(np.asarray(cur, np.int64))
+    return rounds
+
+
+def make_write_pass(W1: int, W2: int, KS: int, NN: int, NR: int, Q: int,
+                    MAXIF: int):
+    """Build the vectorized write pass for one fabric geometry (W1/W2 =
+    tier trash-way indices, KS = TSU shard count, NN/NR = node/replica
+    counts, Q = ring capacity, MAXIF = max in-flight writes).
+
+    The returned function has the signature
+    ``pass_(af, kids, s1, s2, shard, masks, rep, node, wl, rd, wr)
+    -> (af, res)``: kids/s1/s2/shard are [M] int32 op arrays (padded),
+    ``masks`` the [R, M] round matrix from ``write_rounds``, rep/node/wl
+    scalars (one replica, one uniform write-lease override per
+    ``write_batch`` call), and ``res`` the packed [6, M]
+    ``WRITE_RES_FIELDS`` block.
+
+    Each round reproduces the op-scan's write path over a whole
+    conflict-free round at once:
+
+      * the drain schedule in closed form — with round-start queue
+        length L and push rank p = cumsum(active), op i drains iff
+        ``L + p_i > MAXIF`` and pops relative ring index
+        ``L + p_i - MAXIF - 1`` (the queue length invariantly re-caps at
+        MAXIF after every op, so each push drains at most once);
+      * an unwrapped staging buffer (MAXIF pre-round head entries + the
+        round's pushes, ordered by queue position) resolves every
+        drained entry without dynamic wraparound — including a drain of
+        a push from this very round (MAXIF = 0 drains its own push);
+      * the real ring is updated with a keep-last scatter: two pushes
+        collide mod Q only when exactly Q pushes apart, and the earlier
+        one is provably drained before the later lands (the queue never
+        holds Q entries: MAXIF + 1 <= Q - 1);
+      * clocks via running maxima (DESIGN.md §9c prefix-sum style): the
+        TSU grant is clock-independent, so the node clock after drain i
+        is ``max(cts0, cummax(mwts)_i)`` and each replica clock chains
+        the same way over its own drains — closed forms of the
+        sequential ``install``/``cts_after_write`` recurrences;
+      * LRU ticks via the §9c prefix sums: a pending install at op i
+        writes rank ``c[i, rep]`` minus its own drain's contribution,
+        the drain install writes ``c[i, drep]``, with c the 2-D cumsum
+        of per-replica tick increments.
+
+    All rounds run inside ONE ``lax.scan``; on the sharded fabric the
+    caller wraps the pass in ``_shard_exchange`` so the packed TSU
+    buffer is assembled with ONE collective per batch.
+    """
+    i32 = jnp.int32
+    NG, NRK = len(G_KEYS), len(R_KEYS)
+    b2i = lambda b: b.astype(i32)
+    NEG = jnp.int32(-2 ** 30)
+    SB = MAXIF + 1                     # staging slots ahead of the pushes
+
+    def gsum(**kw):
+        out = jnp.zeros((NG,), i32)
+        return out.at[jnp.array([GI[k] for k in kw], i32)].add(
+            jnp.stack(list(kw.values())))
+
+    def rsum(**kw):
+        out = jnp.zeros((NRK,), i32)
+        return out.at[jnp.array([RI[k] for k in kw], i32)].add(
+            jnp.stack(list(kw.values())))
+
+    def tier_install(tier, gseq_a, idx, st, key, wts, rts, ver, gs, lru_v,
+                     th, way, active, trash):
+        """Vectorized ``install_at``: in place on ``(th, way)``, else the
+        victim way; LRU values are the caller's prefix-sum ranks.  The
+        round contract guarantees all active ``(idx, st)`` sets are
+        distinct, so the scatters commute with the sequential order."""
+        vic = S.victim(tier.tag, tier.lru, idx, st)
+        w0 = jnp.where(th, way, vic)
+        evicted = active & ~th & (tier.tag[idx, st, w0] != S.INVALID)
+        w = jnp.where(active, w0, trash)
+
+        def pt(a, v):
+            return a.at[idx, st, w].set(jnp.where(active, v, a[idx, st, w]))
+
+        tier2 = tier._replace(tag=pt(tier.tag, key), wts=pt(tier.wts, wts),
+                              rts=pt(tier.rts, rts), ver=pt(tier.ver, ver),
+                              lru=pt(tier.lru, lru_v))
+        return tier2, pt(gseq_a, gs), evicted
+
+    def round_body(af, out, act, kids, s1, s2, shard, rep, node, wl, rd,
+                   wr):
+        M = kids.shape[0]
+        iota = jnp.arange(M, dtype=i32)
+        reps = jnp.full((M,), rep, i32)
+        nodes = jnp.full((M,), node, i32)
+
+        # ---- drain schedule in closed form (see docstring)
+        p = jnp.cumsum(b2i(act))
+        L = af.wq_len[node]
+        H = af.wq_head[node]
+        drain = act & (L + p > MAXIF)
+        Pn = p[-1]
+        D = jnp.sum(b2i(drain))
+        rel = L + p - MAXIF - 1                 # drained queue position
+
+        # ---- staging buffer: queue positions [0, MAXIF) are the
+        # pre-round head entries (a static ring gather — garbage beyond
+        # the live length L is never read: pre-round drains have
+        # rel < L), positions [L, L + Pn) this round's pushes (the
+        # scatter lands after the prefill, overwriting the garbage tail)
+        push_v = {"key": kids, "rep": reps, "wl": jnp.full((M,), wl, i32),
+                  "shard": shard, "set1": s1, "set2": s2}
+        pre = (H + jnp.arange(SB - 1, dtype=i32)) % Q
+        pidx = jnp.where(act, L + p - 1, SB + M - 1)      # trash slot
+        gi = jnp.where(drain, rel, SB + M - 1)
+
+        def staged(f):
+            st_ = jnp.zeros((SB + M,), i32).at[:SB - 1].set(
+                af.wq[f][node, pre])
+            return st_.at[pidx].set(jnp.where(act, push_v[f], st_[pidx]))[gi]
+
+        dkey = staged("key")
+        drep = jnp.clip(staged("rep"), 0, NR - 1)
+        dwl = staged("wl")
+        dshard = staged("shard")
+        ds1 = staged("set1")
+        ds2 = staged("set2")
+
+        # ---- real ring update: keep-last scatter for the pushes (two
+        # pushes collide mod Q only Q apart; the earlier is already
+        # drained), head/len advanced by the round totals
+        keep = act & (p + Q > Pn)
+        slot = (H + L + p - 1) % Q
+        nrow = jnp.where(keep, node, NN)        # OOB row -> dropped
+        wq2 = {f: a.at[nrow, slot].set(push_v[f], mode="drop")
+               for f, a in af.wq.items()}
+
+        # ---- ONE batched TSU write for the round's drains (state rules)
+        dwl_eff = jnp.where(dwl >= 0, dwl, wr)
+        (mwts, mrts, dver, gs, evict, ovf, tsu2, ver2, gseq2, seq2, nseq2,
+         gnext2) = S.tsu_commit_write_batch(
+            af.tsu, af.tsu_ver, af.tsu_gseq, af.tsu_seq, af.tsu_nseq,
+            af.gseq_next, dshard, dkey, dwl_eff, rd, drain)
+
+        # ---- clock chains: running maxima reproduce the sequential
+        # install/cts_after_write recurrences (grants are clock-free)
+        cts0n = af.sh.cts[node]
+        run_mw = jax.lax.cummax(jnp.where(drain, mwts, NEG))
+        nwA = jnp.maximum(cts0n, run_mw)
+        nrA = jnp.maximum(nwA + 1, mrts)
+        onehot_d = (jnp.arange(NR, dtype=i32)[:, None] == drep[None, :]) \
+            & drain[None, :]
+        runsA = jax.lax.cummax(jnp.where(onehot_d, nwA[None, :], NEG),
+                               axis=1)
+        cts0r = af.rp.cts
+        nwB = jnp.maximum(cts0r[drep], runsA[drep, iota])
+        nrB = jnp.maximum(nwB + 1, nrA)
+        exclA = jnp.concatenate([jnp.full((NR, 1), NEG), runsA[:, :-1]],
+                                axis=1)
+        pend_cts = jnp.maximum(cts0r[rep], exclA[rep])
+
+        # ---- LRU ticks: §9c prefix sums over per-replica increments
+        # (each op bumps its submitter's tick for the pending line, then
+        # its drain bumps the drained entry's replica + the node tier)
+        inc = b2i(act)[None, :] * b2i(jnp.arange(NR, dtype=i32)[:, None]
+                                      == rep) + b2i(onehot_d)
+        c = jnp.cumsum(inc, axis=1)
+        tick0 = af.rp_tick
+        lru_pend = tick0[rep] + c[rep] - b2i(drain & (drep == rep))
+        lru_drain = tick0[drep] + c[drep, iota]
+        c2 = jnp.cumsum(b2i(drain))
+        lru_sh = af.sh_tick[node] + c2
+
+        # ---- pending installs (store-buffer lines: wts=rts=cts, ver=-1)
+        # against the pre-round replica state, then the drain installs —
+        # whose probes run AFTER the pending scatters so a drain of a
+        # same-round push sees its pending line, exactly as the scan does
+        negs = jnp.full((M,), -1, i32)
+        thP, wayP = S.probe(af.rp.tag, reps, s1, kids)
+        rpA, rpgA, evP = tier_install(
+            af.rp, af.rp_gseq, reps, s1, kids, pend_cts, pend_cts, negs,
+            negs, lru_pend, thP & act, wayP, act, W1)
+        thA, wayA = S.probe(af.sh.tag, nodes, ds2, dkey)
+        sh2, shg2, ev1 = tier_install(
+            af.sh, af.sh_gseq, nodes, ds2, dkey, nwA, nrA, dver, gs,
+            lru_sh, thA & drain, wayA, drain, W2)
+        thB, wayB = S.probe(rpA.tag, drep, ds1, dkey)
+        rp2, rpg2, ev2 = tier_install(
+            rpA, rpgA, drep, ds1, dkey, nwB, nrB, dver, gs, lru_drain,
+            thB & drain, wayB, drain, W1)
+
+        # ---- counters: the scan's per-write gv/rv calls, summed
+        n = lambda b: jnp.sum(b2i(b))
+        cross = drain & (dshard != node % KS)
+        b12, b2m, big = S.link_bytes(Pn, D, n(cross))
+        g2 = af.g + gsum(
+            writes=Pn, l1_to_l2=Pn, l2_to_mm=D, write_throughs=D,
+            pcie_blocks=n(cross), tsu_evictions=n(evict),
+            overflow_reinits=n(ovf),
+            capacity_evictions=n(evP) + n(ev1) + n(ev2),
+            bytes_l1_l2=b12, bytes_l2_mm=b2m, bytes_inter_gpu=big)
+        r2 = af.r.at[rep].add(rsum(
+            writes=Pn, l1_to_l2=Pn, capacity_evictions=n(evP)))
+        r2 = r2.at[drep, RI["write_throughs"]].add(b2i(drain))
+        r2 = r2.at[drep, RI["capacity_evictions"]].add(b2i(ev2))
+
+        af = af._replace(
+            rp=rp2._replace(cts=jnp.maximum(cts0r, runsA[:, -1])),
+            rp_gseq=rpg2, rp_tick=tick0 + c[:, -1],
+            sh=sh2._replace(cts=af.sh.cts.at[node].set(
+                jnp.maximum(cts0n, run_mw[-1]))),
+            sh_gseq=shg2, sh_tick=af.sh_tick.at[node].add(D),
+            tsu=tsu2, tsu_ver=ver2, tsu_gseq=gseq2, tsu_seq=seq2,
+            tsu_nseq=nseq2, gseq_next=gnext2,
+            wq=wq2, wq_head=af.wq_head.at[node].set((H + D) % Q),
+            wq_len=af.wq_len.at[node].add(Pn - D), g=g2, r=r2)
+
+        vals = jnp.stack([
+            b2i(drain), jnp.where(drain, dkey, -1),
+            jnp.where(drain, dver, -1), jnp.where(drain, mwts, -1),
+            jnp.where(drain, mrts, -1), jnp.where(drain, gs, -1),
+        ])                                       # WRITE_RES_FIELDS order
+        return af, jnp.where(act[None, :], vals, out)
+
+    def pass_(af, kids, s1, s2, shard, masks, rep, node, wl, rd, wr):
+        out0 = jnp.zeros((len(WRITE_RES_FIELDS), kids.shape[0]), i32)
+
+        def step(carry, act):
+            af, out = carry
+            return round_body(af, out, act, kids, s1, s2, shard, rep,
+                              node, wl, rd, wr), None
 
         (af, out), _ = jax.lax.scan(step, (af, out0), masks)
         return af, out

@@ -54,6 +54,10 @@ class FabricStats:
                               # replica tier (every key a lease hit) — part
                               # of the stats block so backend/sharded
                               # stats-equality assertions cover it
+    write_batches: int = 0    # non-empty write_batch calls (ONE batch
+                              # boundary each, DESIGN.md §11) — host-side
+                              # like fast_read_batches, so stats-equality
+                              # pins the write path's batch boundary too
 
     def bump(self, name: str, by: int = 1) -> None:
         setattr(self, name, getattr(self, name) + by)
@@ -78,8 +82,8 @@ assert not _missing, f"FabricStats lost engine counters: {_missing}"
 # grant pipeline in coherence/fabric/pipeline.py) accumulate counters as
 # one int32 vector per fabric / per replica; these tuples are the ONE
 # definition of that vector's layout.  wb_evictions / inval_msgs are 0 by
-# construction (the paper's claim) and fast_read_batches is host-side, so
-# none of the three appear here.
+# construction (the paper's claim) and fast_read_batches / write_batches
+# are host-side batch-boundary counts, so none of the four appear here.
 G_KEYS = ("reads", "writes", "l1_hits", "l2_hits", "l1_to_l2", "l2_to_mm",
           "coh_miss_l1", "coh_miss_l2", "pcie_blocks", "write_throughs",
           "self_invalidations", "compulsory", "refetches",

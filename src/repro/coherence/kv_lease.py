@@ -63,6 +63,11 @@ class BatchedKVLease:
         return self.backend.read_batch(keys, replica=self.replica)
 
     def put_batch(self, items: Sequence[Tuple[str, Any]]) -> None:
+        """Post every freshly prefilled prefix as ONE write batch: the
+        backend's batched write pass serves the whole storm with batched
+        probes, one batched TSU write-through grant per conflict-free
+        round, and — on the sharded fabric — ONE packed collective per
+        call instead of one per posted write (DESIGN.md §11)."""
         self.backend.write_batch(items, replica=self.replica)
 
     # ------------------------------------------------------------- scalar

@@ -327,6 +327,66 @@ def tsu_commit_batch(tsu: TSUState, idx, set_idx, way, addr, new_memts,
     return tsu_commit_exact(tsu, idx, set_idx, way, addr, new_memts, active)
 
 
+def tsu_commit_write_batch(tsu: TSUState, ver_arr, gseq_arr, seq_arr, nseq,
+                           gseq0, shard, key, wr_eff, rd_lease, active):
+    """The batched write-side TSU transition: ONE probe + allocation +
+    grant + commit for a whole batch of write-throughs (the ``mm_write``
+    half of the batched write pass, DESIGN.md §11 — mirrors
+    ``tsu_lease_batch`` the way writes mirror reads).
+
+    Per request: probe the shard's fully-associative set; on a miss,
+    allocate — evicting the min-``(memts, alloc_seq)`` entry when the
+    shard is full (``victim_lex``, the host ``TSUShard`` dict-order
+    rule); grant via Algorithm 3 as a write (+ the 16-bit overflow
+    reinit) against the entry's current clock; bump the version
+    (``ver+1`` in place, 1 on a fresh allocation) and stamp the grant
+    with a globally unique write-sequence id ``gseq0 + rank`` — all
+    vectorized, one scatter per side array.
+
+    Requires DISTINCT active keys AND at most one active write per
+    shard per call: a second allocation in one shard is sequentially
+    coupled to the first through the victim choice and the per-shard
+    allocation sequencer, so the write pass's conflict rounds
+    (``pipeline.write_rounds``) never co-schedule two TSU writes to one
+    shard.
+
+    shard/key/wr_eff: [n] (``wr_eff`` is the already-resolved write
+    lease — the op's override or the config default); active: [n] bool.
+    Returns ``(wts, rts, ver, gs, evict, overflow, new_tsu, new_ver,
+    new_gseq, new_seq, new_nseq, new_gseq_next)``: wts/rts/ver/gs are
+    the grant fields (gs = -1 on inactive lanes), ``evict`` flags
+    full-set victim evictions, ``overflow`` flags grants that
+    re-initialized the entry."""
+    i32 = jnp.int32
+    b2i = lambda b: b.astype(i32)
+    zset = jnp.zeros_like(shard)
+    cap = tsu.n_ways
+    th, way = probe(tsu.tag, shard, zset, key)
+    vic = victim_lex(tsu.tag, tsu.memts, seq_arr, shard, zset)
+    full = (tsu.tag[shard, zset][..., :-1] != INVALID).all(-1)
+    evict = active & ~th & full
+    w0 = jnp.where(th, way, vic)
+    memts = jnp.where(th, tsu.memts[shard, zset, w0], 0)
+    gr = tsu_lease(memts, jnp.ones(key.shape, bool), rd_lease, wr_eff)
+    ver = jnp.where(th, ver_arr[shard, zset, w0] + 1, 1)
+    seqv = jnp.where(th, seq_arr[shard, zset, w0], nseq[shard])
+    rank = jnp.cumsum(b2i(active)) - b2i(active)       # exclusive gseq rank
+    gs = jnp.where(active, gseq0 + rank, -1)
+    new_tsu = tsu_commit_batch(tsu, shard, zset, w0, key, gr.new_memts,
+                               active)
+    w = jnp.where(active, w0, cap)                     # trash-way routing
+
+    def pt(a, v):
+        return a.at[shard, zset, w].set(
+            jnp.where(active, v, a[shard, zset, w]))
+
+    new_nseq = nseq.at[jnp.where(active, shard, 0)].add(
+        b2i(active & ~th))
+    return (gr.wts, gr.rts, ver, gs, evict, active & gr.overflow, new_tsu,
+            pt(ver_arr, ver), pt(gseq_arr, gs), pt(seq_arr, seqv),
+            new_nseq, gseq0 + jnp.sum(b2i(active)))
+
+
 def tsu_lease_batch(tsu: TSUState, ver_arr, gseq_arr, shard, key,
                     rd_lease, wr_lease, active):
     """The batched read-side TSU transition: ONE probe + grant + commit for

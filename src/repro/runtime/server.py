@@ -10,8 +10,13 @@ are prefilled once, and ONE ``put_batch`` posts their write-throughs.
 Since the batched grant pipeline (DESIGN.md §9) the MISS subset is also
 vectorized — one batched TSU grant + one batched fill per tier, so a
 miss-heavy serve call costs O(1) grant collectives on the sharded fabric
-instead of one per missing prefix.  ``fabric_stats["fast_read_batches"]``
-counts the serve calls the replica tier absorbed entirely.
+instead of one per missing prefix.  The write side is batched the same
+way (DESIGN.md §11): the per-serve ``put_batch`` runs the fabric's
+vectorized write pass, so a republish storm posts its write-throughs with
+ONE packed collective per batch instead of one per posted write.
+``fabric_stats["fast_read_batches"]`` counts the serve calls the replica
+tier absorbed entirely; ``fabric_stats["write_batches"]`` counts the
+posted-write batch boundaries.
 There is no per-key host-object path left: every lease comes from a
 ``FabricBackend`` (default ``default_fabric()`` — the mesh-placed
 ``ShardedArrayFabric`` whenever the process sees more than one device, so

@@ -66,6 +66,12 @@ class Trainer:
         self.psh = spec_shardings(model_spec(self.cfg), mesh,
                                   self.cfg.policy.param_dtype)
         self.ssh = adamw.state_shardings(self.psh, mesh)
+        # stable per-parameter-block fabric keys: each checkpoint publish
+        # re-stamps the SAME keys (a republish storm — eval readers
+        # self-invalidate on lease expiry, never via invalidations)
+        self._param_keys = [
+            "ckpt" + jax.tree_util.keystr(kp) for kp, _ in
+            jax.tree_util.tree_flatten_with_path(self.psh)[0]]
 
     def init_state(self, seed: int = 0) -> adamw.TrainState:
         params = init_model(self.cfg, jax.random.PRNGKey(seed))
@@ -95,11 +101,21 @@ class Trainer:
             step += 1
             if step % self.tcfg.ckpt_period == 0 or step == self.tcfg.total_steps:
                 self.ckpt.save(step, state)
+                # the checkpoint publish is a batched republish storm:
+                # every parameter block's version stamp goes out as ONE
+                # posted write_batch (the batched write pass, DESIGN.md
+                # §11) and the fence drains + jumps the clocks, then the
+                # window lease advances on the authority (mm_write)
+                self.fabric.write_batch(
+                    [(k, step) for k in self._param_keys], replica=0,
+                    wr_lease=self.tcfg.ckpt_period)
+                self.fabric.fence()
                 lease = self.param_clock.on_sync(self.tcfg.ckpt_period,
                                                  version_tag=step)
                 self.events.append({"kind": "param_lease", "step": step,
                                     "wts": int(lease.wts),
-                                    "rts": int(lease.rts)})
+                                    "rts": int(lease.rts),
+                                    "blocks": len(self._param_keys)})
         self.ckpt.wait()
         return {"state": state, "losses": losses, "events": self.events,
                 "final_step": step,

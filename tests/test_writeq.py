@@ -1,0 +1,111 @@
+"""Direct unit tests for the posted write-through queue.
+
+Two layers share the queue contract (DESIGN.md §11): the host
+``WriteQueue`` (a deque draining FIFO past ``max_in_flight``, the
+oracle) and the array fabric's fixed ring (``wq_head``/``wq_len`` over
+``max_in_flight + 2`` slots, drained by prefix-sum sequencing inside
+the op-scan and the batched write pass).  These tests pin the host
+object's own semantics — FIFO drain order, fence-over-a-non-empty-queue
+clock jump, synchronous degeneration at ``max_in_flight=0`` — and then
+the ring against the oracle through enough traffic that the head wraps
+the ring many times.
+"""
+import numpy as np
+
+from repro.coherence.fabric import Op, SharedCache
+from repro.coherence.fabric.tsu import FabricConfig, TSUFabric
+from repro.coherence.fabric.writeq import WriteQueue
+
+from test_fabric_parity import KEYS, SMALL, assert_equivalent, build_pair
+
+
+def test_submit_drains_fifo_beyond_max_in_flight():
+    """Posted semantics: submit returns immediately; drains happen in
+    FIFO order only once more than max_in_flight writes are queued."""
+    fab = TSUFabric(FabricConfig(n_shards=1, max_in_flight=2, wr_lease=4))
+    q = WriteQueue(fab)
+    drained = []
+    for i in range(5):
+        q.submit(f"k{i}", i, on_complete=lambda g, i=i: drained.append(i))
+    assert drained == [0, 1, 2]            # 5 pushes through a 2-deep queue
+    assert len(q) == 2
+    q.flush()
+    assert drained == [0, 1, 2, 3, 4] and len(q) == 0
+    assert fab.stats.write_throughs == 5
+
+
+def test_fence_during_nonempty_queue_drains_then_jumps():
+    """The kernel boundary over a NON-EMPTY queue: every queued write
+    reaches the TSU first (monotone grant timestamps, FIFO), then the
+    barrier returns the jumped clock — no posted write can be lost or
+    reordered across a fence."""
+    fab = TSUFabric(FabricConfig(n_shards=1, max_in_flight=4, wr_lease=4))
+    q = WriteQueue(fab)
+    ahead = SharedCache(fab, node_id=0)    # the writer's clock ran ahead
+    laggard = SharedCache(fab, node_id=0)
+    grants = []
+    for i in range(3):
+        q.submit(f"k{i}", i, on_complete=grants.append)
+    assert len(q) == 3 and not grants      # all still posted
+    ahead.cts = 100
+    cts = q.fence()
+    assert len(q) == 0 and len(grants) == 3
+    wtss = [g.wts for g in grants]
+    assert wtss == sorted(wtss), "fence drained out of FIFO order"
+    assert cts == ahead.cts == 100
+    assert laggard.cts == 100, "laggard clock did not jump to the global max"
+    assert fab.stats.fences == 1
+    assert fab.stats.write_throughs == 3
+    # after the jump no reader clock can lag: the fabric's memts for the
+    # last-drained key is visible at or below the fence clock
+    assert fab.memts("k2") >= grants[-1].rts
+
+
+def test_max_in_flight_zero_is_synchronous():
+    """max_in_flight=0 degenerates to synchronous write-through (the
+    legacy adapter behavior): every submit drains before returning."""
+    fab = TSUFabric(FabricConfig(n_shards=1, max_in_flight=0))
+    q = WriteQueue(fab)
+    for i in range(4):
+        q.submit(f"k{i}", i)
+        assert len(q) == 0
+    assert fab.stats.write_throughs == 4
+
+
+def test_drain_inside_scan_matches_host_oracle():
+    """Drains fired INSIDE the array op-scan (pushes past max_in_flight
+    mid-trace) match the host queue exactly — per-op results, grant
+    order, stats — including the fence that drains the leftovers."""
+    host, arr = build_pair(SMALL)          # max_in_flight=2 per node queue
+    ops = [Op("write", KEYS[i % 4], f"v{i}", replica=i % 3)
+           for i in range(12)]
+    ops.append(Op("fence"))
+    ops += [Op("read", k, replica=1) for k in KEYS[:4]]
+    assert_equivalent(host, arr, ops)
+    assert host.stats()["write_throughs"] == 12
+
+
+def test_ring_wraparound_vs_host_oracle():
+    """The array ring (max_in_flight + 2 slots) wraps its head many times
+    over a long posted-write workload; every wrap must keep FIFO drain
+    order and stay bit-identical to the host deque."""
+    host, arr = build_pair(SMALL)          # ring has 4 slots per node
+    rng = np.random.default_rng(23)
+    pushes = 0
+    for c in range(12):
+        items = [(KEYS[int(rng.integers(len(KEYS)))], f"w{c}.{i}")
+                 for i in range(int(rng.integers(1, 5)))]
+        pushes += len(items)
+        for b in (host, arr):
+            b.write_batch(items, replica=int(c % 2))
+        if c % 4 == 3:
+            for b in (host, arr):
+                b.fence()
+    assert pushes > 4 * 4, "workload too small to wrap the 4-slot ring"
+    q_len = int(np.asarray(arr._af.wq_len)[0])
+    q_head = int(np.asarray(arr._af.wq_head)[0])
+    assert 0 <= q_head < 4 and 0 <= q_len <= 2   # head in range, bounded
+    assert host.stats() == arr.stats()
+    assert list(host.grant_log) == list(arr.grant_log)
+    for k in KEYS:
+        assert host.memts(k) == arr.memts(k)
