@@ -70,6 +70,32 @@ def main(force=False):
                                       interpret=True))
     emit("kernel/lease_probe_interpret", (time.time()-t0)*1e6,
          "protocol_hot_loop=fused")
+    # fused miss/write-pass round kernels (ISSUE 8): steady-state us/call
+    # vs the unfused path (2 lease_probe launches + jnp grant/install ops)
+    from repro.kernels.tier_pass import miss_round, write_grant
+    M, W1, W2, C = 512, 4, 16, 64
+    r = lambda lo, hi, *shp: jnp.asarray(
+        np.random.randint(lo, hi, shp), jnp.int32)
+    miss_in = (r(-1, 50, M, W1), r(0, 40, M, W1), r(-1, 50, M, W2),
+               r(0, 40, M, W2), r(0, 40, M, W2), r(-1, 50, M, C),
+               r(0, 60000, M, C), r(0, 40, M), r(0, 40, M), r(0, 50, M),
+               r(0, 2, M), jnp.full((M,), 10, jnp.int32))
+    emit("kernel/miss_round_interpret",
+         _time(lambda *a: miss_round(*a, interpret=True), *miss_in),
+         f"lanes={M};fuses=3_probes+grant+2_installs")
+
+    def unfused(*a):
+        out = ref.miss_round_ref(*a)
+        p1 = lease_probe(a[0], a[1], a[7], a[9], a[7], a[7], interpret=True)
+        p2 = lease_probe(a[2], a[3], a[8], a[9], a[8], a[8], interpret=True)
+        return out, p1, p2
+    emit("kernel/miss_round_unfused",
+         _time(unfused, *miss_in), "oracle+2_lease_probe_launches")
+    wg_in = (r(-1, 50, M, C), r(0, 60000, M, C), r(0, 99, M, C),
+             r(0, 50, M), jnp.full((M,), 5, jnp.int32))
+    emit("kernel/write_grant_interpret",
+         _time(lambda *a: write_grant(*a, interpret=True), *wg_in),
+         f"lanes={M};fuses=probe+lex_victim+mm_write")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,8 @@ from repro.coherence.fabric.arrays import (ArrayFabric,  # noqa: F401
                                            ShardedArrayFabric,
                                            default_fabric)
 from repro.coherence.fabric.backend import (FabricBackend,  # noqa: F401
-                                            HostFabric, Op)
+                                            HostFabric, Op,
+                                            ReadBatchHandle)
 from repro.coherence.fabric.cache import ReplicaCache, SharedCache  # noqa: F401
 from repro.coherence.fabric.stats import FabricStats  # noqa: F401
 from repro.coherence.fabric.tsu import (FabricConfig, LeaseGrant,  # noqa: F401

@@ -41,7 +41,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.coherence.fabric import pipeline as P_
 from repro.coherence.fabric.backend import (GRANT_LOG_LEN, FabricBackend,
-                                            Op, _bounded)
+                                            Op, ReadBatchHandle, _bounded)
 from repro.coherence.fabric.stats import GI as _GI
 from repro.coherence.fabric.stats import G_KEYS as _G_KEYS
 from repro.coherence.fabric.stats import RI as _RI
@@ -99,36 +99,6 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-def _shard_exchange(inner, KS: int, D: int):
-    """The batched grant pipeline's per-batch shard exchange, as a wrapper
-    for any ``inner(af_full, *args) -> (af_full, res)`` shard_map body:
-    assemble the full shard-major TSU buffer on every device with ONE
-    packed ``state.owner_gather`` (the batch's single collective), run
-    ``inner`` against it collective-free, and keep back only this
-    device's owned rows (``state.owner_take``).  Used by both the batched
-    op-scan and the vectorized miss pass so the packed-TSU layout has
-    exactly one exchange implementation."""
-    i32 = jnp.int32
-    SPD = KS // D
-
-    def pack(af):
-        return S.pack_tsu(af.tsu, af.tsu_ver, af.tsu_gseq, af.tsu_seq,
-                          af.tsu_nseq)
-
-    def put(af, parts):
-        tsu, ver, gseq, seq, nseq = parts
-        return af._replace(tsu=tsu, tsu_ver=ver, tsu_gseq=gseq,
-                           tsu_seq=seq, tsu_nseq=nseq)
-
-    def body(af, *args):
-        me = jax.lax.axis_index("fabric").astype(i32)
-        af2, res = inner(put(af, S.unpack_tsu(
-            S.owner_gather(pack(af), "fabric"))), *args)
-        return put(af2, S.unpack_tsu(S.owner_take(pack(af2), me, SPD))), res
-
-    return body
-
-
 def _af_pspecs() -> _AF:
     """The fabric state's mesh layout as a ``PartitionSpec`` prefix tree:
     the TSU table and its per-shard sequencers (version / gseq / alloc-seq
@@ -165,15 +135,16 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None,
         ``lax.cond`` gates are replaced by masked execution so each
         device runs the same symmetric collective sequence.  Kept for
         ordering-sensitive debugging.
-      * ``"batched"`` — the batched grant pipeline: each device's owned
-        TSU rows (tag/memts/ver/gseq/seq/nseq packed into ONE contiguous
-        buffer, ``state.pack_tsu``) are exchanged ONCE per batch
-        (``state.owner_gather``), the whole scan then runs collective-free
-        against the assembled table on every device — identical replicated
-        arithmetic, so each device computes exactly the grants the owners
-        would have granted — and each device keeps only its own rows back
-        (``state.owner_take``).  O(1) collectives per batch, and the
-        single-device ``lax.cond`` gating stays in place.
+      * ``"batched"`` — the batched grant pipeline never builds a meshed
+        op-scan at all: each device's owned TSU rows (tag/memts/ver/gseq/
+        seq/nseq packed into ONE contiguous buffer, ``state.pack_tsu``)
+        are exchanged ONCE per batch (``state.owner_gather``, the
+        dedicated ``_build_tsu_gather`` program), and the collective-free
+        MESH=None programs — this op-scan and the miss/write/fence
+        passes — run on the lead device against the assembled table
+        (``ArrayFabric._xin``/``_xout``, DESIGN.md §12a).  O(1)
+        collectives per batch, one compilation shared with the
+        single-device fabric.
     """
     i32 = jnp.int32
     one = jnp.ones((), i32)
@@ -621,22 +592,18 @@ def _build_run(S1s, W1, S2s, W2, KS, CAP, NN, NR, Q, MAXIF, LD, MESH=None,
     if MESH is None:
         # the fabric state is donated: callers always rebind it to the
         # returned carry, and aliasing lets XLA update the tier/TSU
-        # arrays in place across batches
+        # arrays in place across batches.  The batched pipeline's sharded
+        # engine ALSO lands here: it assembles the full TSU on the lead
+        # device with the ONE-collective gather program
+        # (``_build_tsu_gather``) and runs this collective-free program
+        # against the assembled state (DESIGN.md §12a).
         return jax.jit(run, donate_argnums=0)
     af_spec = _af_pspecs()
-    if sharded:
-        # per-op collective schedule (PIPE="scan"): the TSU-side state is
-        # partitioned along the fabric axis, everything else replicated;
-        # the per-op results come back replicated (identical on every
-        # device by construction)
-        return jax.jit(shard_map(run, MESH,
-                                 in_specs=(af_spec, P(), P(), P()),
-                                 out_specs=(af_spec, P()), check_vma=False),
-                       donate_argnums=0)
-
-    # the batched grant pipeline: ONE packed collective per batch around
-    # the collective-free scan (_shard_exchange)
-    return jax.jit(shard_map(_shard_exchange(run, KS, D), MESH,
+    # per-op collective schedule (PIPE="scan"): the TSU-side state is
+    # partitioned along the fabric axis, everything else replicated;
+    # the per-op results come back replicated (identical on every
+    # device by construction)
+    return jax.jit(shard_map(run, MESH,
                              in_specs=(af_spec, P(), P(), P()),
                              out_specs=(af_spec, P()), check_vma=False),
                    donate_argnums=0)
@@ -692,53 +659,64 @@ def _build_fast_read(mesh=None):
 
 
 @functools.lru_cache(maxsize=32)
-def _build_miss_run(W1, W2, KS, MESH=None):
+def _build_miss_run(W1, W2, KS):
     """Phase 2 of the two-phase batched read, jitted: the vectorized miss
     pass (``pipeline.make_miss_pass``) — ALL conflict-free rounds of the
     miss subset in one call (one ``lax.scan`` over the round masks, the
     fabric state donated so XLA updates it in place), one batched probe
     per tier, ONE batched TSU grant and one batched fill per tier per
-    round.
-
-    With ``MESH`` the pass runs as a ``shard_map`` body under the batched
-    grant pipeline's collective schedule: the packed TSU buffer is
-    assembled with ONE ``owner_gather`` per call — OUTSIDE the round scan
-    — the pass itself is collective-free, and each device keeps back only
-    its owned rows; a miss-heavy sharded serving batch costs O(1)
-    collectives no matter how many rounds or misses."""
-    fn = P_.make_miss_pass(W1, W2, KS)
-    if MESH is None:
-        return jax.jit(fn, donate_argnums=0)
-    af_spec = _af_pspecs()
-    return jax.jit(shard_map(
-        _shard_exchange(fn, KS, int(MESH.devices.size)), MESH,
-        in_specs=(af_spec,) + (P(),) * 9,
-        out_specs=(af_spec, P()), check_vma=False), donate_argnums=0)
+    round.  The program is collective-free; the sharded engine brackets
+    it with the gather/scatter exchange (``ArrayFabric._xin``/``_xout``),
+    so a miss-heavy sharded serving batch costs O(1) collectives no
+    matter how many rounds or misses."""
+    return jax.jit(P_.make_miss_pass(W1, W2, KS), donate_argnums=0)
 
 
 @functools.lru_cache(maxsize=32)
-def _build_write_run(W1, W2, KS, NN, NR, Q, MAXIF, MESH=None):
+def _build_write_run(W1, W2, KS, NN, NR, Q, MAXIF):
     """The batched write pass, jitted: ALL conflict-free rounds of a
     posted-write batch in one call (``pipeline.make_write_pass`` — one
-    ``lax.scan`` over the round masks, the fabric state donated), each
-    round serving its pending installs, ring pushes and queue drains with
-    batched probes, ONE batched TSU write-through grant
-    (``state.tsu_commit_write_batch``) and prefix-sum clock/LRU sequencing
-    (DESIGN.md §11).
+    ``lax.scan`` over the round masks, the fabric state donated), the
+    lane-static drain schedule resolved on the host
+    (``pipeline.write_schedule``), ONE batched TSU write-through grant
+    per round (``state.tsu_commit_write_batch``) and prefix-sum
+    clock/LRU sequencing (DESIGN.md §11).  Collective-free; the sharded
+    engine brackets it with the gather/scatter exchange, so a republish
+    storm costs O(1) collectives no matter how many writes or rounds."""
+    return jax.jit(P_.make_write_pass(W1, W2, KS, NN, NR, Q, MAXIF),
+                   donate_argnums=0)
 
-    With ``MESH`` the pass runs under the batched grant pipeline's
-    collective schedule (``_shard_exchange``): the packed TSU buffer is
-    assembled with ONE ``owner_gather`` per ``write_batch`` — OUTSIDE the
-    round scan — so a republish storm costs O(1) collectives no matter
-    how many writes or rounds."""
-    fn = P_.make_write_pass(W1, W2, KS, NN, NR, Q, MAXIF)
-    if MESH is None:
-        return jax.jit(fn, donate_argnums=0)
-    af_spec = _af_pspecs()
-    return jax.jit(shard_map(
-        _shard_exchange(fn, KS, int(MESH.devices.size)), MESH,
-        in_specs=(af_spec,) + (P(),) * 10,
-        out_specs=(af_spec, P()), check_vma=False), donate_argnums=0)
+
+@functools.lru_cache(maxsize=32)
+def _build_fence_run(W1, W2, KS, NN, NR, Q):
+    """The vectorized fence pass, jitted (``pipeline.make_fence_pass``):
+    drain EVERY node's queue over conflict-free rounds with the
+    lane-static schedule from ``pipeline.fence_schedule``, then jump all
+    client clocks to the global max (§11b).  Collective-free; used by the
+    sharded batched engine so the serving loop's fences stop paying the
+    op-scan's per-op dispatch (the single-device ``ArrayFabric`` keeps
+    the op-scan fence as the reference path)."""
+    return jax.jit(P_.make_fence_pass(W1, W2, KS, NN, NR, Q),
+                   donate_argnums=0)
+
+
+@functools.lru_cache(maxsize=8)
+def _build_tsu_gather(MESH):
+    """The batched engine's per-batch grant exchange, jitted: pack each
+    device's owned TSU rows (``state.pack_tsu``) and assemble the full
+    shard-major buffer on every device with ONE ``owner_gather`` — the
+    batch's single collective — returning the unpacked full-table leaves
+    (replicated; the engine adopts the lead device's copy).  This is the
+    one program the O(1)-collectives-per-batch pin traces for the dev0
+    pass engine: the passes themselves are collective-free."""
+    F = P("fabric")
+
+    def body(tsu, ver, gseq, seq, nseq):
+        return S.unpack_tsu(S.owner_gather(
+            S.pack_tsu(tsu, ver, gseq, seq, nseq), "fabric"))
+
+    return jax.jit(shard_map(body, MESH, in_specs=(F,) * 5,
+                             out_specs=(P(),) * 5, check_vma=False))
 
 
 class ArrayFabric(FabricBackend):
@@ -775,21 +753,43 @@ class ArrayFabric(FabricBackend):
             raise ValueError(
                 f"n_shards={self._KS} must be divisible by the fabric "
                 f"mesh's {int(mesh.devices.size)} devices")
-        # without a mesh the two pipelines share one (collective-free)
-        # op-scan — normalize so they share one compilation too
+        # the batched pipeline runs every program on the lead device
+        # against gather-assembled state (the dev0 pass engine, DESIGN.md
+        # §12a), so its op-scan / passes are the collective-free MESH=None
+        # programs — shared compilations with the single-device fabric.
+        # Only pipeline="scan" keeps the per-op shard_map schedule.
+        run_mesh = mesh if (mesh is not None and pipeline == "scan") \
+            else None
         self._run = _build_run(self._S1, self._W1, self._S2, self._W2,
                                self._KS, self._CAP, n_nodes,
                                self.n_replicas, self._Q, cfg.max_in_flight,
-                               self._LD, mesh,
-                               pipeline if mesh is not None else "scan")
-        self._miss_run = (_build_miss_run(self._W1, self._W2, self._KS,
-                                          mesh)
+                               self._LD, run_mesh, "scan")
+        self._miss_run = (_build_miss_run(self._W1, self._W2, self._KS)
                           if pipeline == "batched" else None)
         self._write_run = (_build_write_run(self._W1, self._W2, self._KS,
                                             n_nodes, self.n_replicas,
-                                            self._Q, cfg.max_in_flight,
-                                            mesh)
+                                            self._Q, cfg.max_in_flight)
                            if pipeline == "batched" else None)
+        self._fence_run = (_build_fence_run(self._W1, self._W2, self._KS,
+                                            n_nodes, self.n_replicas,
+                                            self._Q)
+                           if pipeline == "batched" else None)
+        # the sharded batched engine: ONE packed owner_gather per batch
+        # assembles the full TSU table, the passes run on the lead device,
+        # and `_xout` scatters the updated TSU rows back to their owners
+        # then immediately dispatches the NEXT batch's gather — the
+        # exchange double-buffers under the current batch's host decode
+        # (ISSUE 8 tentpole, DESIGN.md §12a)
+        if mesh is not None and pipeline == "batched":
+            self._gather_run = _build_tsu_gather(mesh)
+            self._dev0 = jax.devices()[0]
+            f3 = named_sharding(mesh, (self._KS, 1, self._CAP + 1),
+                                ("fabric_shard", None, None))
+            f1 = named_sharding(mesh, (self._KS,), ("fabric_shard",))
+            self._tsu_shardings = (f3, f3, f3, f3, f1)
+        else:
+            self._gather_run = None
+        self._tsu_full = None
         self._af = self._init_af()
         # host-side payload plumbing (the arrays decide; this only ships)
         self._keys: Dict = {}
@@ -802,7 +802,7 @@ class ArrayFabric(FabricBackend):
         # bounded on BOTH backends with the same cap, so parity-compared
         # logs truncate identically (oracle traces are far shorter)
         self.grant_log = collections.deque(maxlen=GRANT_LOG_LEN)
-        self._fast_read = _build_fast_read(self.mesh)
+        self._fast_read = _build_fast_read(run_mesh)
         self._meta_dev = None           # device-side kid -> set1 table
         self._fast_read_batches = 0     # all-hit batches (FabricStats field)
         self._write_batches = 0         # non-empty write_batch calls
@@ -829,19 +829,80 @@ class ArrayFabric(FabricBackend):
             g=z(len(_G_KEYS)), r=z(R, len(_R_KEYS)),
         )
         if self.mesh is not None:
-            # lay the state out per _af_pspecs BEFORE the first run: TSU
-            # rows land on their owning devices (sharding.py rules map the
-            # shard-major dims onto the fabric axis), the rest replicated
-            rep = NamedSharding(self.mesh, P())
             f3 = named_sharding(self.mesh, (self._KS, 1, self._CAP + 1),
                                 ("fabric_shard", None, None))
             f1 = named_sharding(self.mesh, (self._KS,), ("fabric_shard",))
-            af = jax.device_put(af, _AF(
-                rp=rep, rp_gseq=rep, rp_tick=rep, sh=rep, sh_gseq=rep,
-                sh_tick=rep, tsu=f3, tsu_ver=f3, tsu_gseq=f3, tsu_seq=f3,
-                tsu_nseq=f1, gseq_next=rep, wq=rep, wq_head=rep,
-                wq_len=rep, g=rep, r=rep))
+            if self.pipeline == "batched":
+                # dev0 pass engine: only the TSU — the state of record the
+                # per-batch gather assembles — lives on the mesh; every
+                # other leaf stays on the lead device where the passes run
+                af = af._replace(
+                    tsu=jax.device_put(af.tsu, f3),
+                    tsu_ver=jax.device_put(af.tsu_ver, f3),
+                    tsu_gseq=jax.device_put(af.tsu_gseq, f3),
+                    tsu_seq=jax.device_put(af.tsu_seq, f3),
+                    tsu_nseq=jax.device_put(af.tsu_nseq, f1))
+            else:
+                # per-op schedule: lay the state out per _af_pspecs BEFORE
+                # the first run — TSU rows land on their owning devices
+                # (sharding.py rules map the shard-major dims onto the
+                # fabric axis), the rest replicated
+                rep = NamedSharding(self.mesh, P())
+                af = jax.device_put(af, _AF(
+                    rp=rep, rp_gseq=rep, rp_tick=rep, sh=rep, sh_gseq=rep,
+                    sh_tick=rep, tsu=f3, tsu_ver=f3, tsu_gseq=f3,
+                    tsu_seq=f3, tsu_nseq=f1, gseq_next=rep, wq=rep,
+                    wq_head=rep, wq_len=rep, g=rep, r=rep))
         return af
+
+    # --------------------------------------------------- grant exchange
+    def _dispatch_gather(self) -> None:
+        af = self._af
+        self._tsu_full = self._gather_run(af.tsu, af.tsu_ver,
+                                          af.tsu_gseq, af.tsu_seq,
+                                          af.tsu_nseq)
+
+    def _xin(self) -> _AF:
+        """Enter a device pass: hand it the lead-device view of the
+        fabric state.  On the sharded batched engine the TSU leaves are
+        the gather-assembled full table — prefetched by the previous
+        ``_xout`` (dispatched here only on the very first batch) and
+        adopted as zero-copy lead-device views of the replicated gather
+        outputs.  Identity on the single-device fabric."""
+        if self._gather_run is None:
+            return self._af
+        if self._tsu_full is None:
+            self._dispatch_gather()
+        full = self._tsu_full
+        self._tsu_full = None
+        dev0 = self._dev0
+
+        def local(x):
+            for s in x.addressable_shards:
+                if s.device == dev0:
+                    return s.data
+            return jax.device_put(x, dev0)
+
+        tsu, ver, gseq, seq, nseq = jax.tree_util.tree_map(local, full)
+        return self._af._replace(tsu=tsu, tsu_ver=ver, tsu_gseq=gseq,
+                                 tsu_seq=seq, tsu_nseq=nseq)
+
+    def _xout(self, af: _AF) -> None:
+        """Leave a device pass: adopt its output state.  On the sharded
+        batched engine the updated TSU rows scatter back to their owning
+        devices (async) and the NEXT batch's gather is dispatched
+        immediately, so the one collective per batch overlaps this
+        batch's host-side decode instead of sitting on the critical
+        path."""
+        if self._gather_run is None:
+            self._af = af
+            return
+        tsu, ver, gseq, seq, nseq = jax.device_put(
+            (af.tsu, af.tsu_ver, af.tsu_gseq, af.tsu_seq, af.tsu_nseq),
+            self._tsu_shardings)
+        self._af = af._replace(tsu=tsu, tsu_ver=ver, tsu_gseq=gseq,
+                               tsu_seq=seq, tsu_nseq=nseq)
+        self._dispatch_gather()
 
     # ------------------------------------------------------------- keys
     def _kid(self, key) -> int:
@@ -886,10 +947,12 @@ class ArrayFabric(FabricBackend):
                 enc["wl"][i] = -1 if op.wr_lease is None else op.wr_lease
         with obs.span("fabric.exchange"):
             xs = {k: jnp.asarray(v) for k, v in enc.items()}
+            af = self._xin()
         with obs.span("fabric.scan", n_ops=B0):
-            self._af, res = self._run(self._af, xs,
-                                      jnp.int32(self.cfg.rd_lease),
-                                      jnp.int32(self.cfg.wr_lease))
+            af, res = self._run(af, xs,
+                                jnp.int32(self.cfg.rd_lease),
+                                jnp.int32(self.cfg.wr_lease))
+            self._xout(af)
             obs.fence(res, "fabric.scan.device")
         with obs.span("fabric.decode", n_ops=B0):
             res = jax.device_get(res)
@@ -920,7 +983,7 @@ class ArrayFabric(FabricBackend):
             dk = int(res["dlog_key"][i][j])
             nd = (node if node is not None else
                   next(n for n in range(self.n_nodes) if self._qmirror[n]))
-            mk, mval, mrep = self._qmirror[nd].popleft()
+            mk, mval, mrep, _mwl = self._qmirror[nd].popleft()
             assert mk == dk, "queue mirror diverged from the in-scan ring"
             self._vals[int(res["dlog_gseq"][i][j])] = mval
             self._writes_since_prune += 1
@@ -966,7 +1029,9 @@ class ArrayFabric(FabricBackend):
             self._pending_n[(op.replica, kid)] = self._pending_n.get(
                 (op.replica, kid), 0) + 1
             node = op.replica // self._rpn
-            self._qmirror[node].append((kid, op.value, op.replica))
+            self._qmirror[node].append(
+                (kid, op.value, op.replica,
+                 -1 if op.wr_lease is None else op.wr_lease))
             self._drains(res, i, node=node)
             return None
         if kind == "fence":
@@ -1014,8 +1079,19 @@ class ArrayFabric(FabricBackend):
         grant per round — falling back to the exact op-scan under
         ``pipeline="scan"`` or when the subset is so conflict-ridden the
         round budget (``max(_MIN_ROUND_BUDGET, misses // 4)``) is blown."""
+        return self.read_batch_async(keys, replica).result()
+
+    def read_batch_async(self, keys: Sequence, replica: int = 0):
+        """The overlapped batched read (backend contract): everything
+        device-side — the phase-1 probe, the miss pass, and on the
+        sharded engine the NEXT batch's grant exchange — is dispatched
+        before this returns; only the miss subset's host-side payload
+        decode waits in the handle.  A serving loop
+        (``Server.serve_stream``) dispatches batch N+1 while batch N's
+        decode is still pending, hiding the exchange + decode latency
+        under device compute."""
         if not keys:
-            return []
+            return ReadBatchHandle(lambda: [])
         B = len(keys)
         with obs.span("fabric.pack", n_ops=B):
             keymap = self._keys
@@ -1043,36 +1119,46 @@ class ArrayFabric(FabricBackend):
             vals, pend = self._vals, self._pending
             if hit.all():
                 self._fast_read_batches += 1
-                return [(vals[g], v) if v >= 0
-                        else (pend[(replica, k)], None)
-                        for k, v, g in zip(kids, ver.tolist(),
-                                           gseq.tolist())]
+                ready = [(vals[g], v) if v >= 0
+                         else (pend[(replica, k)], None)
+                         for k, v, g in zip(kids, ver.tolist(),
+                                            gseq.tolist())]
+                return ReadBatchHandle(lambda: ready)
             out: List = [None] * B
             for i in np.nonzero(hit)[0]:
                 v = int(ver[i])
                 out[i] = ((pend[(replica, kids[i])], None) if v < 0
                           else (vals[int(gseq[i])], v))
             miss = np.nonzero(~hit)[0]
-        if miss.size:
-            with obs.span("fabric.miss_pass", misses=int(miss.size)):
-                served = (self._read_misses_batched(keys, kids_np, miss,
-                                                    replica)
-                          if self.pipeline == "batched" else None)
-                if served is None:      # scan pipeline / round-budget bail
-                    res = self.apply([Op("read", keys[i], replica=replica)
-                                      for i in miss])
-                    served = [r for _, r in res]
-                for j, i in enumerate(miss):
-                    out[i] = served[j]
-        return out
+        with obs.span("fabric.miss_pass", misses=int(miss.size)):
+            decode = (self._read_misses_dispatch(keys, kids_np, miss,
+                                                 replica)
+                      if self.pipeline == "batched" else None)
+        if decode is None:          # scan pipeline / round-budget bail
+            res = self.apply([Op("read", keys[i], replica=replica)
+                              for i in miss])
+            served = [r for _, r in res]
+            for j, i in enumerate(miss):
+                out[i] = served[j]
+            return ReadBatchHandle(lambda: out)
 
-    def _read_misses_batched(self, keys, kids_np, miss, replica):
-        """Serve the miss subset with the vectorized miss pass: split into
-        conflict-free rounds (`pipeline.conflict_rounds`), run each round
-        as ONE jitted pass over the padded subset, then decode results —
-        grant-log appends and payload lookups — in op order.  Returns the
-        per-miss results, or None to signal the op-scan fallback when the
-        subset is too conflict-ridden to pay off."""
+        def finish():
+            with obs.span("fabric.miss_pass", misses=int(miss.size)):
+                served = decode()
+            for j, i in enumerate(miss):
+                out[i] = served[j]
+            return out
+
+        return ReadBatchHandle(finish)
+
+    def _read_misses_dispatch(self, keys, kids_np, miss, replica):
+        """Dispatch the miss subset through the vectorized miss pass:
+        graph-colored conflict-free rounds (`pipeline.conflict_rounds`),
+        ONE jitted pass over the padded subset.  Returns a decode
+        closure that resolves results — grant-log appends and payload
+        lookups — in op order (the deferred half of
+        ``read_batch_async``), or None to signal the op-scan fallback
+        when the subset is too conflict-ridden to pay off."""
         m = miss.size
         with obs.span("fabric.pack", misses=int(m)):
             kids_m = kids_np[miss]
@@ -1086,32 +1172,40 @@ class ArrayFabric(FabricBackend):
             # the serving hot path
             M = max(32, _next_pow2(m))
             R = max(4, _next_pow2(len(rounds)))
-            pad = lambda a: np.pad(a.astype(np.int32), (0, M - m))
             masks = P_.round_masks(rounds, R, M)
+            ops = np.zeros((4, M), np.int32)
+            ops[0, :m] = kids_m
+            ops[1, :m] = meta[:, 0]
+            ops[2, :m] = meta[:, 1]
+            ops[3, :m] = meta[:, 2]
             node = replica // self._rpn
         with obs.span("fabric.exchange", lanes=M, rounds=R):
-            args = (jnp.asarray(pad(kids_m)), jnp.asarray(pad(meta[:, 0])),
-                    jnp.asarray(pad(meta[:, 1])), jnp.asarray(pad(meta[:, 2])),
-                    jnp.asarray(masks))
+            args = (jnp.asarray(ops), jnp.asarray(masks))
+            af = self._xin()
         with obs.span("fabric.scan", misses=int(m)):
-            self._af, res = self._miss_run(
-                self._af, *args, np.int32(replica), np.int32(node),
+            af, res = self._miss_run(
+                af, *args, np.int32(replica), np.int32(node),
                 jnp.int32(self.cfg.rd_lease), jnp.int32(self.cfg.wr_lease))
+            self._xout(af)
             obs.fence(res, "fabric.scan.device")
-        with obs.span("fabric.decode", misses=int(m)):
-            res = np.asarray(jax.device_get(res))  # packed [7, M] result block
-            fields = dict(zip(P_.RES_FIELDS, res))
-            out: List = []
-            for j, i in enumerate(miss):
-                if fields["mm_used"][j]:
-                    self.grant_log.append((keys[i], int(fields["wts"][j]),
-                                           int(fields["rts"][j]),
-                                           int(fields["version"][j])))
-                out.append(self._read_result(int(kids_m[j]), replica,
-                                             fields["found"][j],
-                                             fields["version"][j],
-                                             fields["gseq"][j]))
-        return out
+        def decode():
+            with obs.span("fabric.decode", misses=int(m)):
+                r = np.asarray(jax.device_get(res))  # packed [7, M] block
+                fields = dict(zip(P_.RES_FIELDS, r))
+                out: List = []
+                for j, i in enumerate(miss):
+                    if fields["mm_used"][j]:
+                        self.grant_log.append(
+                            (keys[i], int(fields["wts"][j]),
+                             int(fields["rts"][j]),
+                             int(fields["version"][j])))
+                    out.append(self._read_result(int(kids_m[j]), replica,
+                                                 fields["found"][j],
+                                                 fields["version"][j],
+                                                 fields["gseq"][j]))
+            return out
+
+        return decode
 
     def _note_write_batch(self) -> None:
         self._write_batches += 1
@@ -1119,9 +1213,10 @@ class ArrayFabric(FabricBackend):
     def write_batch(self, items, replica: int = 0, wr_lease=None) -> None:
         """Batched posted writes (backend contract), vectorized: the whole
         storm runs through the batched write pass (DESIGN.md §11) —
-        conflict-free rounds (``pipeline.write_rounds``, drain schedule
-        included), ONE batched TSU write-through grant per round, and on
-        the sharded fabric ONE packed collective per batch — falling back
+        graph-colored conflict-free rounds with the lane-static drain
+        schedule (``pipeline.write_schedule``), ONE batched TSU
+        write-through grant per round, and on the sharded fabric ONE
+        packed collective per batch — falling back
         to the exact op-scan under ``pipeline="scan"`` or when the batch
         is so conflict-ridden the round budget
         (``max(_MIN_ROUND_BUDGET, writes // 2)``) is blown."""
@@ -1139,8 +1234,8 @@ class ArrayFabric(FabricBackend):
 
     def _write_batch_batched(self, items, replica, wr_lease) -> bool:
         """Serve a posted-write batch with the vectorized write pass:
-        split into conflict-free rounds (the host-side drain-schedule
-        simulation in ``pipeline.write_rounds``), run all rounds as ONE
+        resolve the lane-static drain schedule and graph-colored rounds
+        on the host (``pipeline.write_schedule``), run all rounds as ONE
         jitted pass over the padded batch, then replay the returned drain
         log — payload handoffs and grant-log appends — in op order via
         the op-scan's own ``_drains`` decoder.  Returns False to signal
@@ -1150,27 +1245,33 @@ class ArrayFabric(FabricBackend):
         with obs.span("fabric.pack", n_ops=B):
             kids = np.asarray([self._kid(k) for k, _ in items], np.int32)
             meta = self._meta[kids]
-            pending = [(k, *self._meta[k].tolist(), r)
-                       for k, _, r in self._qmirror[node]]
-            rounds = P_.write_rounds(kids, meta[:, 0], meta[:, 1],
-                                     meta[:, 2], replica, pending,
-                                     self.cfg.max_in_flight)
+            wl = -1 if wr_lease is None else wr_lease
+            pending = [(k, *self._meta[k].tolist(), r, w)
+                       for k, _, r, w in self._qmirror[node]]
+            rounds, sched = P_.write_schedule(
+                kids, meta[:, 0], meta[:, 1], meta[:, 2], replica, wl,
+                pending, self.cfg.max_in_flight)
             if len(rounds) > max(_MIN_ROUND_BUDGET, B // 2):
                 return False
             M = max(32, _next_pow2(B))
             R = max(4, _next_pow2(len(rounds)))
-            pad = lambda a: np.pad(a.astype(np.int32), (0, M - B))
             masks = P_.round_masks(rounds, R, M)
-            wl = -1 if wr_lease is None else wr_lease
+            ops = np.zeros((4, M), np.int32)
+            ops[0, :B] = kids
+            ops[1, :B] = meta[:, 0]
+            ops[2, :B] = meta[:, 1]
+            ops[3, :B] = meta[:, 2]
+            sched = np.pad(sched, ((0, 0), (0, M - B)))
         with obs.span("fabric.exchange", lanes=M, rounds=R):
-            args = (jnp.asarray(pad(kids)), jnp.asarray(pad(meta[:, 0])),
-                    jnp.asarray(pad(meta[:, 1])),
-                    jnp.asarray(pad(meta[:, 2])), jnp.asarray(masks))
+            args = (jnp.asarray(ops), jnp.asarray(sched),
+                    jnp.asarray(masks))
+            af = self._xin()
         with obs.span("fabric.scan", n_ops=B):
-            self._af, res = self._write_run(
-                self._af, *args, np.int32(replica), np.int32(node),
+            af, res = self._write_run(
+                af, *args, np.int32(replica), np.int32(node),
                 jnp.int32(wl), jnp.int32(self.cfg.rd_lease),
                 jnp.int32(self.cfg.wr_lease))
+            self._xout(af)
             obs.fence(res, "fabric.scan.device")
         with obs.span("fabric.decode", n_ops=B):
             res = np.asarray(jax.device_get(res))  # packed [6, M] block
@@ -1184,7 +1285,7 @@ class ArrayFabric(FabricBackend):
                 self._pending[(replica, kid)] = v
                 self._pending_n[(replica, kid)] = self._pending_n.get(
                     (replica, kid), 0) + 1
-                self._qmirror[node].append((kid, v, replica))
+                self._qmirror[node].append((kid, v, replica, wl))
                 self._drains(rd, i, node=node)
         if self._writes_since_prune >= _PRUNE_EVERY:
             with obs.span("fabric.donate"):
@@ -1200,7 +1301,62 @@ class ArrayFabric(FabricBackend):
                        wr_lease=wr_lease)])
 
     def fence(self) -> int:
+        """Drain every node's posted-write queue, then jump all client
+        clocks to the global max (§11b).  On the sharded batched engine
+        the fence runs as the dedicated vectorized fence pass (one jitted
+        call, one gather collective) instead of paying the op-scan's
+        per-drain dispatch; the single-device fabric keeps the op-scan
+        fence as the bit-identical reference path (both are
+        parity-checked against ``HostFabric``)."""
+        if self._gather_run is not None and self._fence_run is not None:
+            out = self._fence_batched()
+            if out is not None:
+                return out
         return self.apply([Op("fence")])[0][1]
+
+    def _fence_batched(self) -> Optional[int]:
+        """Serve a fence with the vectorized fence pass: every queued
+        entry (all nodes, node-major FIFO — the host drain order) becomes
+        one schedule lane, rounds are conflict-free segments
+        (``pipeline.fence_schedule``), and the drain log replays through
+        the op-scan's own ``_drains`` decoder.  Returns None to signal
+        the op-scan fallback when the drain set is too conflict-ridden."""
+        entries = []
+        for nd in range(self.n_nodes):
+            for kid, _v, rep, wl in self._qmirror[nd]:
+                s1, s2, shard = self._meta[kid]
+                entries.append((kid, s1, s2, shard, rep, wl, nd))
+        D0 = len(entries)
+        with obs.span("fabric.pack", n_ops=D0):
+            rounds, sched = P_.fence_schedule(entries)
+            if len(rounds) > max(_MIN_ROUND_BUDGET, max(1, D0) // 2):
+                return None
+            D = max(8, _next_pow2(max(1, D0)))
+            R = max(4, _next_pow2(len(rounds)))
+            sched = np.pad(sched, ((0, 0), (0, D - D0)))
+            masks = P_.round_masks(rounds, R, D)
+        with obs.span("fabric.exchange", lanes=D, rounds=R):
+            args = (jnp.asarray(sched), jnp.asarray(masks))
+            af = self._xin()
+        with obs.span("fabric.scan", n_ops=D0):
+            af, res, gmax = self._fence_run(
+                af, *args, jnp.int32(self.cfg.rd_lease),
+                jnp.int32(self.cfg.wr_lease))
+            self._xout(af)
+            obs.fence(res, "fabric.scan.device")
+        with obs.span("fabric.decode", n_ops=D0):
+            res = np.asarray(jax.device_get(res))   # packed [6, D] block
+            f = dict(zip(P_.WRITE_RES_FIELDS, res))
+            # ONE fence op draining D0 entries: the decoder reads per-op
+            # drain-log rows, so the whole lane axis is row 0
+            rd = {"dcount": np.asarray([D0], np.int32)}
+            rd.update({k: f[k][None, :]
+                       for k in P_.WRITE_RES_FIELDS[1:]})
+            self._drains(rd, 0)
+        if self._writes_since_prune >= _PRUNE_EVERY:
+            with obs.span("fabric.donate"):
+                self.prune_payloads()
+        return int(jax.device_get(gmax))
 
     def mm_write(self, key, value, wr_lease=None):
         return self.apply([Op("mm_write", key, value,

@@ -60,6 +60,26 @@ def _bounded(cfg: FabricConfig) -> FabricConfig:
     return cfg
 
 
+class ReadBatchHandle:
+    """The pending result of ``FabricBackend.read_batch_async``: the
+    device work is already dispatched; ``.result()`` runs (and caches)
+    the host-side decode.  Single-threaded by design — JAX's async
+    dispatch provides the overlap, the handle only defers the Python
+    decode loop."""
+
+    __slots__ = ("_finish", "_out")
+
+    def __init__(self, finish):
+        self._finish = finish
+        self._out = None
+
+    def result(self) -> List:
+        if self._finish is not None:
+            self._out = self._finish()
+            self._finish = None
+        return self._out
+
+
 class FabricBackend(abc.ABC):
     """Common surface of the host-object and array-native fabrics."""
 
@@ -141,6 +161,22 @@ class FabricBackend(abc.ABC):
 
     def _note_fast_read_batch(self) -> None:
         """Record an all-hit batch in this backend's stats block."""
+
+    def read_batch_async(self, keys: Sequence,
+                         replica: int = 0) -> "ReadBatchHandle":
+        """Dispatch a batched read and return a handle; ``.result()``
+        yields exactly ``read_batch``'s output.  The array backend
+        overrides this to dispatch the device work (phase-1 probe, miss
+        pass, and — on the sharded engine — the next grant exchange)
+        eagerly while deferring the host-side payload decode to
+        ``.result()``, so a serving loop can overlap batch N's decode
+        with batch N+1's dispatch (``Server.serve_stream``).  Ordering
+        contract: resolve handles in dispatch order, and resolve every
+        outstanding handle before the next write/fence — the deferred
+        decode reads the payload maps those ops mutate.  This base
+        implementation simply completes synchronously."""
+        out = self.read_batch(keys, replica)
+        return ReadBatchHandle(lambda: out)
 
     def write_batch(self, items: Sequence[Tuple[Any, Any]],
                     replica: int = 0, wr_lease: Optional[int] = None) -> None:

@@ -62,6 +62,16 @@ class BatchedKVLease:
         sharded fabric, DESIGN.md §9)."""
         return self.backend.read_batch(keys, replica=self.replica)
 
+    def get_batch_async(self, keys: Sequence[str]):
+        """Dispatch ``get_batch``'s fabric work and defer the host-side
+        payload decode: returns a ``ReadBatchHandle`` whose ``.result()``
+        yields exactly ``get_batch``'s output.  On the sharded fabric the
+        probe, miss pass and the NEXT batch's grant exchange are already
+        in flight when this returns — ``Server.serve_stream``'s overlap
+        boundary (DESIGN.md §12a).  Ordering contract is the backend's:
+        resolve before this replica's next write/fence."""
+        return self.backend.read_batch_async(keys, replica=self.replica)
+
     def put_batch(self, items: Sequence[Tuple[str, Any]]) -> None:
         """Post every freshly prefilled prefix as ONE write batch: the
         backend's batched write pass serves the whole storm with batched

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import protocol
 from repro.kernels.lease_probe import lease_probe
+from repro.kernels.tier_pass import write_grant
 
 INVALID = jnp.int32(-1)
 
@@ -347,8 +348,8 @@ def tsu_commit_write_batch(tsu: TSUState, ver_arr, gseq_arr, seq_arr, nseq,
     shard per call: a second allocation in one shard is sequentially
     coupled to the first through the victim choice and the per-shard
     allocation sequencer, so the write pass's conflict rounds
-    (``pipeline.write_rounds``) never co-schedule two TSU writes to one
-    shard.
+    (``pipeline.write_schedule``) never co-schedule two TSU writes to
+    one shard.
 
     shard/key/wr_eff: [n] (``wr_eff`` is the already-resolved write
     lease — the op's override or the config default); active: [n] bool.
@@ -361,13 +362,15 @@ def tsu_commit_write_batch(tsu: TSUState, ver_arr, gseq_arr, seq_arr, nseq,
     b2i = lambda b: b.astype(i32)
     zset = jnp.zeros_like(shard)
     cap = tsu.n_ways
-    th, way = probe(tsu.tag, shard, zset, key)
-    vic = victim_lex(tsu.tag, tsu.memts, seq_arr, shard, zset)
-    full = (tsu.tag[shard, zset][..., :-1] != INVALID).all(-1)
+    # fused probe + lex victim + mm_write grant (ONE Pallas grid pass —
+    # kernels.tier_pass.write_grant, the write-side twin of the miss
+    # round's fused kernel; same victim_lex/tsu_lease math, bit-exact)
+    th, w0, full, g_wts, g_rts, g_memts, g_ovf = write_grant(
+        tsu.tag[shard, zset][..., :-1], tsu.memts[shard, zset][..., :-1],
+        seq_arr[shard, zset][..., :-1], key,
+        jnp.broadcast_to(jnp.asarray(wr_eff, i32), key.shape))
+    gr = TSUGrant(g_wts, g_rts, g_memts, g_ovf)
     evict = active & ~th & full
-    w0 = jnp.where(th, way, vic)
-    memts = jnp.where(th, tsu.memts[shard, zset, w0], 0)
-    gr = tsu_lease(memts, jnp.ones(key.shape, bool), rd_lease, wr_eff)
     ver = jnp.where(th, ver_arr[shard, zset, w0] + 1, 1)
     seqv = jnp.where(th, seq_arr[shard, zset, w0], nseq[shard])
     rank = jnp.cumsum(b2i(active)) - b2i(active)       # exclusive gseq rank

@@ -1,2 +1,3 @@
 from repro.kernels.ops import (decode_attention, flash_attention,  # noqa: F401
-                               lease_probe, rmsnorm, ssd_chunk, use_pallas)
+                               lease_probe, miss_round, rmsnorm, ssd_chunk,
+                               use_pallas, write_grant)

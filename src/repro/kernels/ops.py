@@ -13,6 +13,8 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.lease_probe import lease_probe as _lease_probe
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_chunk import ssd_chunk as _ssd_chunk
+from repro.kernels.tier_pass import miss_round as _miss_round
+from repro.kernels.tier_pass import write_grant as _write_grant
 
 _MODE = "interpret"
 
@@ -56,3 +58,15 @@ def lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts, **kw):
         return ref.lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts)
     return _lease_probe(tag_rows, rts_rows, cts, addr, mwts, mrts,
                         interpret=_interp(), **kw)
+
+
+def miss_round(*args, **kw):
+    if _MODE == "off":
+        return ref.miss_round_ref(*args)
+    return _miss_round(*args, interpret=_interp(), **kw)
+
+
+def write_grant(*args, **kw):
+    if _MODE == "off":
+        return ref.write_grant_ref(*args)
+    return _write_grant(*args, interpret=_interp(), **kw)

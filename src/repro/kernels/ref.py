@@ -68,3 +68,78 @@ def lease_probe_ref(tag_rows, rts_rows, cts, addr, mwts, mrts):
     lease = protocol.install(cts, mwts, mrts)
     new_cts = protocol.cts_after_write(cts, lease.wts)
     return tag_hit, hit, way, row_rts, lease.wts, lease.rts, new_cts
+
+
+def _first_match_ref(eq, rows):
+    first = eq & (jnp.cumsum(eq.astype(jnp.int32), -1) == 1)
+    return jnp.sum(jnp.where(first, rows, 0), -1)
+
+
+def _tsu_grant_ref(memts, is_write, lease_v):
+    """Algorithm 3 + the 16-bit overflow reinit (protocol.mm_*), one
+    side at a time (``lease_v`` = rd or wr lease per lane)."""
+    if is_write:
+        lease, new_memts = protocol.mm_write(memts, lease_v)
+    else:
+        lease, new_memts = protocol.mm_read(memts, lease_v)
+    ovf = new_memts > protocol.TS_MAX
+    wts = jnp.where(ovf, 0, lease.wts)
+    rts = jnp.where(ovf, lease_v, lease.rts)
+    return wts, rts, jnp.where(ovf, rts, new_memts), ovf
+
+
+def miss_round_ref(rp_tag, rp_rts, sh_tag, sh_rts, sh_wts, ts_tag, ts_mem,
+                   cts1, cts2, addr, act, rd):
+    """Read-side round math (kernels.tier_pass.miss_round), derived
+    exclusively from core.protocol: replica probe, shared probe, TSU read
+    grant, and both install levels — the 16 per-lane intermediates of
+    ``pipeline.make_miss_pass``'s round body."""
+    act = act != 0
+    eq1 = rp_tag == addr[:, None]
+    th1 = eq1.any(-1)
+    way1 = jnp.argmax(eq1, -1).astype(jnp.int32)
+    h1 = th1 & protocol.valid(cts1, _first_match_ref(eq1, rp_rts))
+    th1, h1 = th1 & act, h1 & act
+    miss = act & ~h1
+
+    eq2 = sh_tag == addr[:, None]
+    th2 = eq2.any(-1)
+    way2 = jnp.argmax(eq2, -1).astype(jnp.int32)
+    rts2 = _first_match_ref(eq2, sh_rts)
+    wts2 = _first_match_ref(eq2, sh_wts)
+    h2 = th2 & protocol.valid(cts2, rts2)
+    th2, h2 = th2 & miss, h2 & miss
+    need = miss & ~h2
+
+    eqt = ts_tag == addr[:, None]
+    tht = eqt.any(-1)
+    tway = jnp.argmax(eqt, -1).astype(jnp.int32)
+    memts = jnp.where(tht, _first_match_ref(eqt, ts_mem), 0)
+    mwts, mrts, nmem, ovf = _tsu_grant_ref(memts, False, rd)
+    fnd = need & tht
+
+    leaseA = protocol.install(cts2, mwts, mrts)
+    rwts = jnp.where(h2, wts2, leaseA.wts)
+    rrts = jnp.where(h2, rts2, leaseA.rts)
+    lease1 = protocol.install(cts1, rwts, rrts)
+    return (th1, h1, way1, th2, h2, way2, fnd, tway, mwts, mrts, nmem,
+            fnd & ovf, leaseA.wts, leaseA.rts, lease1.wts, lease1.rts)
+
+
+def write_grant_ref(ts_tag, ts_mem, ts_seq, addr, wl, invalid=-1):
+    """Write-side TSU math (kernels.tier_pass.write_grant): probe,
+    lexicographic victim (min-(memts, alloc_seq); the host dict-order
+    rule) and the ``mm_write`` grant + overflow reinit."""
+    eq = ts_tag == addr[:, None]
+    th = eq.any(-1)
+    way = jnp.argmax(eq, -1).astype(jnp.int32)
+    inval = ts_tag == invalid
+    p = jnp.where(inval, jnp.int32(-2 ** 30), ts_mem)
+    pmin = jnp.min(p, -1, keepdims=True)
+    s = jnp.where(p == pmin, ts_seq, jnp.int32(2 ** 30))
+    vic = jnp.argmin(s, -1).astype(jnp.int32)
+    w0 = jnp.where(th, way, vic)
+    full = (~inval).all(-1)
+    memts = jnp.where(th, _first_match_ref(eq, ts_mem), 0)
+    wts, rts, nmem, ovf = _tsu_grant_ref(memts, True, wl)
+    return th, w0, full, wts, rts, nmem, ovf

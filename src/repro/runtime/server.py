@@ -97,8 +97,11 @@ class Server:
         with obs.span("serve", cat="serve", n_requests=len(requests)):
             return self._serve(requests)
 
-    def _serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
-        # group into decode batches, pad the last one
+    def _group_wave(self, requests: List[Request]):
+        """Group a wave into decode batches (pad the last one) and
+        dispatch its batched lease probe asynchronously: on the sharded
+        fabric the probe, miss pass and the next grant exchange are in
+        flight when this returns (``kv.get_batch_async``)."""
         with obs.span("serve.group", cat="serve"):
             groups: List[List[Request]] = []
             for i in range(0, len(requests), self.B):
@@ -109,13 +112,24 @@ class Server:
             prompts = [np.stack([g.prompt for g in group])
                        for group in groups]
             keys = [_prefix_key(p) for p in prompts]
-        # ONE batched lease probe over the call's unique prefixes
         with obs.span("serve.lease_probe", cat="serve", n_groups=len(keys)):
             uniq = list(dict.fromkeys(keys))
-            leases_u = dict(zip(uniq, self.kv.get_batch(uniq)))
+            handle = self.kv.get_batch_async(uniq)
+        return groups, prompts, keys, uniq, handle
+
+    def _resolve_and_prefill(self, keys, prompts, uniq, handle):
+        """Resolve the wave's probe handle (decode the already-dispatched
+        device work) and prefill + post the missed prefixes.  Must run
+        before the next wave's probe dispatch — the fabric's handle
+        ordering contract (resolve before the next write/fence)."""
+        with obs.span("serve.lease_resolve", cat="serve"):
+            leases_u = dict(zip(uniq, handle.result()))
             leases = [leases_u[k] for k in keys]
         filled = self._prefill_misses(keys, dict(zip(keys, prompts)), leases)
+        return leases, filled
 
+    def _decode_groups(self, groups, prompts, keys, leases,
+                       filled) -> Dict[int, np.ndarray]:
         out: Dict[int, np.ndarray] = {}
         with obs.span("serve.decode", cat="serve"):
             for group, pr, key, hit in zip(groups, prompts, keys, leases):
@@ -131,6 +145,49 @@ class Server:
                 for j, g in enumerate(group):
                     if g.rid >= 0:
                         out[g.rid] = gen[j, :g.max_new]
+        return out
+
+    def _serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
+        groups, prompts, keys, uniq, handle = self._group_wave(requests)
+        leases, filled = self._resolve_and_prefill(keys, prompts, uniq,
+                                                   handle)
+        return self._decode_groups(groups, prompts, keys, leases, filled)
+
+    def serve_stream(self, waves) -> Dict[int, np.ndarray]:
+        """Pipelined serving over an iterable of request waves — the
+        overlapped grant-exchange boundary (ISSUE 8 tentpole, DESIGN.md
+        §12a).
+
+        For each wave the schedule is: resolve wave N's probe handle,
+        prefill + post its misses (the write), **dispatch wave N+1's
+        batched lease probe**, then run wave N's decode loop — so wave
+        N+1's grant exchange and miss pass execute under wave N's decode
+        compute instead of serializing in front of it.  A handle is
+        outstanding only across the decode loop (no write/fence), which
+        satisfies the fabric's read-handle ordering contract, and every
+        fabric op still happens in the same order as back-to-back
+        ``serve`` calls — results and fabric state are bit-identical to
+        the sequential path.
+        """
+        out: Dict[int, np.ndarray] = {}
+        pending = None
+        with obs.span("serve_stream", cat="serve"):
+            for wave in waves:
+                if pending is None:
+                    pending = self._group_wave(wave)
+                    continue
+                groups, prompts, keys, uniq, handle = pending
+                leases, filled = self._resolve_and_prefill(
+                    keys, prompts, uniq, handle)
+                pending = self._group_wave(wave)     # overlaps the decode
+                out.update(self._decode_groups(groups, prompts, keys,
+                                               leases, filled))
+            if pending is not None:
+                groups, prompts, keys, uniq, handle = pending
+                leases, filled = self._resolve_and_prefill(
+                    keys, prompts, uniq, handle)
+                out.update(self._decode_groups(groups, prompts, keys,
+                                               leases, filled))
         return out
 
     @property

@@ -281,11 +281,13 @@ def test_fast_read_batches_in_stats():
 
 def test_batched_pipeline_one_collective_per_batch():
     """The acceptance pin: under pipeline="batched" a sharded batch of B
-    ops issues O(1) grant collectives — ONE packed all_gather at batch
-    level and NONE inside the op-scan — while pipeline="scan" keeps its
-    per-scan-step collective.  Counted structurally in the jaxpr, so the
-    pin holds on any mesh size (the collective executes once per batch
-    regardless of B)."""
+    ops issues O(1) grant collectives — ONE packed all_gather in the
+    dedicated grant-exchange program (``_gather_run``) and NONE in the
+    op-scan or the miss pass (the dev0 pass engine's programs are
+    collective-free) — while pipeline="scan" keeps its per-scan-step
+    collective.  Counted structurally in the jaxpr, so the pin holds on
+    any mesh size (the collective executes once per batch regardless of
+    B)."""
     import jax
     import jax.numpy as jnp
 
@@ -300,16 +302,21 @@ def test_batched_pipeline_one_collective_per_batch():
     for pipe in ("batched", "scan"):
         fab = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
                                  pipeline=pipe)
-        jx = jax.make_jaxpr(fab._run)(fab._af, xs, rd, wr)
+        af = fab._af
+        jx = jax.make_jaxpr(fab._run)(af, xs, rd, wr)
         counts[pipe] = collective_counts(jx)
         if pipe == "batched":
-            m = jnp.zeros((8,), jnp.int32)
+            jg = jax.make_jaxpr(fab._gather_run)(
+                af.tsu, af.tsu_ver, af.tsu_gseq, af.tsu_seq, af.tsu_nseq)
+            counts["gather"] = collective_counts(jg)
             jm = jax.make_jaxpr(fab._miss_run)(
-                fab._af, m, m, m, m, jnp.zeros((4, 8), bool),
-                jnp.int32(1), jnp.int32(0), rd, wr)
+                af, jnp.zeros((4, 8), jnp.int32),
+                jnp.zeros((4, 8), bool), jnp.int32(1), jnp.int32(0),
+                rd, wr)
             counts["miss_pass"] = collective_counts(jm)
-    assert counts["batched"] == {"total": 1, "in_loop": 0}, counts
-    assert counts["miss_pass"] == {"total": 1, "in_loop": 0}, counts
+    assert counts["gather"] == {"total": 1, "in_loop": 0}, counts
+    assert counts["batched"] == {"total": 0, "in_loop": 0}, counts
+    assert counts["miss_pass"] == {"total": 0, "in_loop": 0}, counts
     assert counts["scan"]["in_loop"] >= 1, counts       # O(B) collectives
 
 

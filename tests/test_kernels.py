@@ -226,3 +226,125 @@ def test_lease_probe_matches_protocol(interpret, seed):
     np.testing.assert_array_equal(
         hit, want_tag_hit & np.asarray(protocol.valid(cts, rts_way)))
     np.testing.assert_array_equal(row_rts, rts_way)
+
+
+# ------------------------------------------------ fused miss/write rounds
+def _miss_round_inputs(N, W1, W2, C, seed=0):
+    rng = np.random.default_rng(seed)
+    r = lambda lo, hi, shp: rng.integers(lo, hi, shp).astype(np.int32)
+    return (r(-1, 30, (N, W1)), r(0, 40, (N, W1)), r(-1, 30, (N, W2)),
+            r(0, 40, (N, W2)), r(0, 40, (N, W2)), r(-1, 30, (N, C)),
+            r(0, 70000, (N, C)), r(0, 40, N), r(0, 40, N), r(0, 30, N),
+            r(0, 2, N), np.full(N, 10, np.int32))
+
+
+_MISS_OUTS = ["th1", "h1", "way1", "th2", "h2", "way2", "fnd", "tway",
+              "mwts", "mrts", "nmem", "ovf", "nwa", "nra", "nw1", "nr1"]
+_WAYS = {"way1", "way2", "tway"}           # meaningful only on a tag hit
+
+
+@pytest.mark.parametrize("interpret", [
+    True,
+    pytest.param(False, marks=pytest.mark.skipif(
+        jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm"),
+        reason="compiled Pallas needs a TPU/GPU backend")),
+])
+@pytest.mark.parametrize("N,W1,W2,C,seed", [
+    (64, 4, 8, 16, 0), (256, 2, 4, 64, 1), (96, 8, 2, 8, 2)])
+def test_miss_round_kernel(interpret, N, W1, W2, C, seed):
+    """The fused miss-pass round kernel (3 probes + Algorithm 3 read
+    grant + both Algorithm 1/2 install levels) is bit-identical to the
+    protocol-derived oracle, interpret and compiled."""
+    from repro.kernels.tier_pass import miss_round
+    ins = _miss_round_inputs(N, W1, W2, C, seed)
+    got = miss_round(*map(jnp.asarray, ins), interpret=interpret)
+    want = ref.miss_round_ref(*map(jnp.asarray, ins))
+    tags = {"way1": ins[0], "way2": ins[2], "tway": ins[5]}
+    for g, w, name in zip(got, want, _MISS_OUTS):
+        g, w = np.asarray(g), np.asarray(w)
+        if name in _WAYS:
+            eq = (tags[name] == ins[9][:, None]).any(-1)
+            np.testing.assert_array_equal(g[eq], w[eq], err_msg=name)
+        else:
+            np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_miss_round_matches_state_rules(seed):
+    """Pin the fused kernel's grant + install math to core.state /
+    core.protocol: the TSU read grant equals ``state.tsu_lease`` and the
+    two install levels equal chained ``state.install_lease`` calls, on
+    lanes where the kernel's masks make them observable."""
+    from repro.core import state as S
+    from repro.kernels.tier_pass import miss_round
+    N = 128
+    ins = _miss_round_inputs(N, 4, 4, 32, seed)
+    (th1, h1, way1, th2, h2, way2, fnd, tway, mwts, mrts, nmem, ovf,
+     nwa, nra, nw1, nr1) = miss_round(*map(jnp.asarray, ins),
+                                      interpret=True)
+    cts1, cts2, addr, act, rd = (jnp.asarray(x) for x in ins[7:])
+    # TSU grant: entry clock is the first-match row value (0 if absent)
+    eqt = jnp.asarray(ins[5]) == addr[:, None]
+    first = eqt & (jnp.cumsum(eqt.astype(jnp.int32), -1) == 1)
+    memts = jnp.where(eqt.any(-1),
+                      jnp.sum(jnp.where(first, jnp.asarray(ins[6]), 0), -1),
+                      0)
+    gr = S.tsu_lease(memts, jnp.zeros(memts.shape, bool), rd, rd)
+    np.testing.assert_array_equal(np.asarray(mwts), np.asarray(gr.wts))
+    np.testing.assert_array_equal(np.asarray(mrts), np.asarray(gr.rts))
+    np.testing.assert_array_equal(np.asarray(nmem), np.asarray(gr.new_memts))
+    # install chain: shared level then replica level
+    wA, rA, _ = S.install_lease(cts2, mwts, mrts)
+    np.testing.assert_array_equal(np.asarray(nwa), np.asarray(wA))
+    np.testing.assert_array_equal(np.asarray(nra), np.asarray(rA))
+    rwts = jnp.where(h2, ref._first_match_ref(
+        jnp.asarray(ins[2]) == addr[:, None], jnp.asarray(ins[4])), nwa)
+    rrts = jnp.where(h2, ref._first_match_ref(
+        jnp.asarray(ins[2]) == addr[:, None], jnp.asarray(ins[3])), nra)
+    w1, r1, _ = S.install_lease(cts1, rwts, rrts)
+    np.testing.assert_array_equal(np.asarray(nw1), np.asarray(w1))
+    np.testing.assert_array_equal(np.asarray(nr1), np.asarray(r1))
+    # mask algebra: the kernel's flags obey the round body's lattice
+    th1, h1, th2, h2, fnd = map(np.asarray, (th1, h1, th2, h2, fnd))
+    assert not (h1 & ~th1).any() and not (h2 & ~th2).any()
+    assert not (th1 & ~np.asarray(act).astype(bool)).any()
+    assert not (th2 & np.asarray(h1)).any()
+    assert not (fnd & np.asarray(h2)).any()
+
+
+@pytest.mark.parametrize("interpret", [
+    True,
+    pytest.param(False, marks=pytest.mark.skipif(
+        jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm"),
+        reason="compiled Pallas needs a TPU/GPU backend")),
+])
+@pytest.mark.parametrize("N,C,seed", [(64, 16, 0), (256, 64, 1), (40, 8, 2)])
+def test_write_grant_kernel(interpret, N, C, seed):
+    """The fused write-side TSU kernel (probe + lexicographic victim +
+    mm_write grant) is bit-identical to the oracle and to
+    ``state.victim_lex``/``state.tsu_lease``, interpret and compiled."""
+    from repro.core import state as S
+    from repro.kernels.tier_pass import write_grant
+    rng = np.random.default_rng(seed)
+    ts_tag = rng.integers(-1, 20, (N, C)).astype(np.int32)
+    ts_mem = rng.integers(0, 70000, (N, C)).astype(np.int32)
+    ts_seq = rng.integers(0, 50, (N, C)).astype(np.int32)
+    addr = rng.integers(0, 20, N).astype(np.int32)
+    wl = rng.integers(1, 10, N).astype(np.int32)
+    got = write_grant(*map(jnp.asarray, (ts_tag, ts_mem, ts_seq, addr, wl)),
+                      interpret=interpret)
+    want = ref.write_grant_ref(*map(jnp.asarray,
+                                    (ts_tag, ts_mem, ts_seq, addr, wl)))
+    for g, w, name in zip(got, want,
+                          ["th", "way", "full", "wts", "rts", "nmem",
+                           "ovf"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+    # pin the victim rule to state.victim_lex on the miss lanes
+    th, way = got[0], got[1]
+    pad = lambda a: jnp.concatenate(
+        [jnp.asarray(a)[:, None, :], jnp.zeros((N, 1, 1), jnp.int32)], -1)
+    vic = S.victim_lex(pad(ts_tag), pad(ts_mem), pad(ts_seq),
+                       jnp.arange(N), jnp.zeros(N, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(way)[~np.asarray(th)],
+                                  np.asarray(vic)[~np.asarray(th)])

@@ -1,0 +1,249 @@
+"""Graph-colored conflict rounds: properties and colored-vs-greedy parity.
+
+ISSUE 8's tentpole replaces the greedy contiguous round splitters with
+order-preserving chain-depth graph coloring (``pipeline.color_rounds``)
+so a set-colliding storm needs `max conflict-chain depth` rounds instead
+of `number of contiguous conflict-free segments`.  Three properties keep
+the passes exact and worth it:
+
+  * **order preservation** — any two ops sharing a resource (key,
+    replica set, shared set, TSU shard) land in strictly increasing
+    rounds in op order, so committing rounds in order IS the sequential
+    order along every conflict chain;
+  * **never worse than greedy** — the colored splitter uses at most as
+    many rounds as the PR-5/PR-6 contiguous splitters (kept as oracles:
+    ``conflict_rounds_greedy`` / ``write_rounds_greedy``), and strictly
+    fewer on interleaved storms (the round-budget fallback fires less);
+  * **pass parity** — the miss / write passes produce bit-identical
+    results, stats, grant logs and device state whether driven by the
+    colored or the greedy rounds (randomized storms, both splitters over
+    the same fabric geometry).
+"""
+import numpy as np
+import pytest
+
+from repro.coherence.fabric import (ArrayFabric, FabricConfig, HostFabric,
+                                    Op)
+from repro.coherence.fabric import pipeline as P_
+
+# tight sets so random storms collide constantly (deep conflict chains)
+TIGHT = dict(n_shards=2, rd_lease=8, wr_lease=4, tsu_capacity=16,
+             shared_sets=4, shared_ways=2, replica_sets=2, replica_ways=2,
+             max_in_flight=3)
+
+
+def _random_ops(rng, n, nk=12):
+    """Random op footprints shaped like interned keys: the set/shard
+    routes are functions of the key id, as ``ArrayFabric._kid`` makes
+    them."""
+    kids = rng.integers(0, nk, n).astype(np.int64)
+    return kids, (kids * 7 + 3) % 4, (kids * 5 + 1) % 8, kids % 2
+
+
+def _check_rounds(rounds, n):
+    """Structural invariants shared by every splitter: the rounds are a
+    partition of range(n), ascending within each round."""
+    cat = np.concatenate([r for r in rounds]) if n else np.asarray([])
+    assert sorted(cat.tolist()) == list(range(n))
+    for r in rounds:
+        assert list(r) == sorted(r)
+
+
+# ---------------------------------------------------------- color_rounds
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_color_rounds_order_preserving_within_chains(seed):
+    rng = np.random.default_rng(seed)
+    kids, s1, s2, _ = _random_ops(rng, 64)
+    fps = [((0, k), (1, a), (2, b)) for k, a, b in zip(kids, s1, s2)]
+    colors = P_.color_rounds(fps)
+    for i in range(len(fps)):
+        for j in range(i + 1, len(fps)):
+            if set(fps[i]) & set(fps[j]):
+                assert colors[i] < colors[j], (i, j, colors)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_colored_read_rounds_never_more_than_greedy(seed):
+    rng = np.random.default_rng(seed)
+    kids, s1, s2, _ = _random_ops(rng, 48)
+    colored = P_.conflict_rounds(kids, s1, s2)
+    greedy = P_.conflict_rounds_greedy(kids, s1, s2)
+    _check_rounds(colored, len(kids))
+    _check_rounds(greedy, len(kids))
+    assert len(colored) <= len(greedy)
+
+
+def test_colored_reads_beat_greedy_on_interleaved_storm():
+    """The motivating case: two interleaved conflict chains.  Greedy
+    breaks at every repeat (one round per op pair); coloring packs each
+    chain level into one round — chain depth rounds total."""
+    kids = np.asarray([0, 1] * 8)             # a,b,a,b,... (16 ops)
+    s1 = kids % 2
+    s2 = kids % 4
+    colored = P_.conflict_rounds(kids, s1, s2)
+    greedy = P_.conflict_rounds_greedy(kids, s1, s2)
+    assert len(greedy) == 8                   # one break per (a, b) pair
+    assert len(colored) == 8                  # chains are depth 8 here
+    # phase-offset duplicate pairs: every chain is depth 2, but greedy's
+    # contiguous breaks straddle the pairs — n_keys + 1 segments
+    kids = np.asarray([0, 0, 1, 1, 2, 2, 3, 3])
+    s1 = (kids * 7 + 3) % 8
+    s2 = (kids * 5) % 8
+    colored = P_.conflict_rounds(kids, s1, s2)
+    greedy = P_.conflict_rounds_greedy(kids, s1, s2)
+    assert len(greedy) == 5
+    assert len(colored) == 2
+
+
+# -------------------------------------------------------- write schedule
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_write_schedule_colored_matches_greedy_drains(seed):
+    """The drain schedule is lane-static — identical under both
+    splitters — and the colored rounds never outnumber the greedy ones
+    while preserving op order along every hard-resource chain."""
+    rng = np.random.default_rng(seed)
+    kids, s1, s2, shard = _random_ops(rng, 40)
+    pending = [(int(k), int(a), int(b), int(sh), 1, -1)
+               for k, a, b, sh in zip(*_random_ops(rng, 2))]
+    args = (kids, s1, s2, shard, 1, -1, pending, 3)
+    colored, sc = P_.write_schedule(*args)
+    greedy, sg = P_.write_rounds_greedy(*args)
+    np.testing.assert_array_equal(sc, sg)      # schedule is round-free
+    _check_rounds(colored, len(kids))
+    _check_rounds(greedy, len(kids))
+    assert len(colored) <= len(greedy)
+    # order preservation over the hard footprints (push + non-exempt
+    # drain resources), colors strictly increase along each chain
+    colors = np.zeros(len(kids), np.int64)
+    for r, idxs in enumerate(colored):
+        colors[idxs] = r
+    last: dict = {}
+    for j in range(len(kids)):
+        fp = [("k", int(kids[j])), ("s1", 1, int(s1[j]))]
+        if sc[0, j]:
+            fp += [("sh", int(sc[4, j])), ("s2", int(sc[6, j]))]
+        for res in fp:
+            if res in last:
+                assert colors[j] >= colors[last[res]], (j, res)
+            last[res] = j
+
+
+# ------------------------------------------------------------ pass parity
+def _drive_read_storms(fab, seed, n_calls=8):
+    """Publish-seeded random read storms with heavy key duplication (deep
+    conflict chains in the miss subset)."""
+    rng = np.random.default_rng(seed)
+    keys = [f"c{i}" for i in range(10)]
+    out = [fab.apply([Op("publish", k, f"{k}@0", node=i % 2)
+                      for i, k in enumerate(keys)])]
+    for c in range(n_calls):
+        batch = [keys[int(i)] for i in rng.integers(0, len(keys), 24)]
+        rep = int(rng.integers(4))
+        out.append([("rb", fab.read_batch(batch, replica=rep))])
+        if c % 3 == 2:
+            fab.write_batch([(keys[int(i)], f"w{c}.{i}")
+                             for i in rng.integers(0, len(keys), 6)],
+                            replica=rep)
+            out.append([("fence", fab.fence())])
+    return out
+
+
+def _drive_write_storms(fab, seed, n_calls=8):
+    rng = np.random.default_rng(seed)
+    keys = [f"w{i}" for i in range(8)]
+    out = []
+    for c in range(n_calls):
+        items = [(keys[int(i)], f"v{c}.{j}")
+                 for j, i in enumerate(rng.integers(0, len(keys), 16))]
+        rep = int(rng.integers(4))
+        wl = (None, 2, 9)[int(rng.integers(3))]
+        fab.write_batch(items, replica=rep, wr_lease=wl)
+        if c % 2:
+            out.append(("fence", fab.fence()))
+        out.append(("reads", fab.read_batch(keys, replica=rep)))
+    return out
+
+
+def _assert_same_fabric(a, b):
+    import jax
+
+    assert list(a.grant_log) == list(b.grant_log)
+    assert a.stats() == b.stats()
+    for r in range(a.n_replicas):
+        assert a.replica_stats(r) == b.replica_stats(r)
+    for x, y in zip(jax.tree_util.tree_leaves(a._af),
+                    jax.tree_util.tree_leaves(b._af)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_read_pass_colored_vs_greedy_parity(seed, monkeypatch):
+    """The miss pass is bit-identical under colored and greedy rounds —
+    results, grant log, stats, mirrors and the full device state — and
+    both match the host oracle."""
+    cfg = FabricConfig(**TIGHT)
+    mk = lambda: ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    colored = mk()
+    out_c = _drive_read_storms(colored, seed)
+    monkeypatch.setattr(P_, "conflict_rounds", P_.conflict_rounds_greedy)
+    greedy = mk()
+    out_g = _drive_read_storms(greedy, seed)
+    host = HostFabric(cfg, n_nodes=2, replicas_per_node=2)
+    out_h = _drive_read_storms(host, seed)
+    for c, g in zip(out_c, out_g):
+        assert [r for _, r in c] == [r for _, r in g]
+    for c, h in zip(out_c, out_h):
+        assert [r for _, r in c] == [r for _, r in h]
+    assert list(colored.grant_log) == list(host.grant_log)
+    assert colored.stats() == host.stats()
+    _assert_same_fabric(colored, greedy)
+
+
+@pytest.mark.parametrize("seed", [3, 4, 5])
+def test_write_pass_colored_vs_greedy_parity(seed, monkeypatch):
+    """The lane-static write pass (and the fences between storms) is
+    bit-identical under colored and greedy rounds, and both match the
+    host oracle."""
+    cfg = FabricConfig(**TIGHT)
+    mk = lambda: ArrayFabric(cfg, n_nodes=2, replicas_per_node=2)
+    colored = mk()
+    out_c = _drive_write_storms(colored, seed)
+    orig = P_.write_schedule
+    monkeypatch.setattr(P_, "write_schedule",
+                        lambda *a: orig(*a, splitter="greedy"))
+    greedy = mk()
+    out_g = _drive_write_storms(greedy, seed)
+    monkeypatch.undo()
+    host = HostFabric(cfg, n_nodes=2, replicas_per_node=2)
+    out_h = _drive_write_storms(host, seed)
+    assert out_c == out_g == out_h
+    assert list(colored.grant_log) == list(host.grant_log)
+    assert colored.stats() == host.stats()
+    _assert_same_fabric(colored, greedy)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(0, 9), min_size=1, max_size=40),
+           st.integers(0, 5))
+    def test_fuzz_colored_rounds_properties(kid_list, nset):
+        """Hypothesis sweep of the two structural properties on read
+        rounds: partition-of-range + order preservation + <= greedy."""
+        kids = np.asarray(kid_list, np.int64)
+        s1 = (kids + nset) % 3
+        s2 = (kids * 3 + nset) % 5
+        colored = P_.conflict_rounds(kids, s1, s2)
+        greedy = P_.conflict_rounds_greedy(kids, s1, s2)
+        _check_rounds(colored, len(kids))
+        assert len(colored) <= len(greedy)
+        colors = np.zeros(len(kids), np.int64)
+        for r, idxs in enumerate(colored):
+            colors[idxs] = r
+        for i in range(len(kids)):
+            for j in range(i + 1, len(kids)):
+                if kids[i] == kids[j] or s1[i] == s1[j] or s2[i] == s2[j]:
+                    assert colors[i] < colors[j]
+except ImportError:                                   # pragma: no cover
+    pass

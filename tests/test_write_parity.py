@@ -188,10 +188,12 @@ def test_write_batches_counter_parity():
 
 def test_write_pass_one_collective_per_512_storm():
     """The acceptance pin: a 512-op publish storm through the sharded
-    batched write pass issues exactly ONE packed collective — at batch
-    level, NONE inside the round scan — while the per-op scan schedule
-    keeps a collective in its scan body (>= 512 per storm).  Counted
-    structurally in the jaxpr, so the pin holds on any mesh size."""
+    batched engine issues exactly ONE packed collective — in the
+    per-batch grant-exchange program, NONE inside the write or fence
+    pass (the dev0 pass engine's programs are collective-free) — while
+    the per-op scan schedule keeps a collective in its scan body
+    (>= 512 per storm).  Counted structurally in the jaxpr, so the pin
+    holds on any mesh size."""
     import jax
     import jax.numpy as jnp
 
@@ -202,20 +204,31 @@ def test_write_pass_one_collective_per_512_storm():
     counts = {}
     fab = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
                              pipeline="batched")
-    z = jnp.zeros((B,), jnp.int32)
+    af = fab._af
+    jg = jax.make_jaxpr(fab._gather_run)(
+        af.tsu, af.tsu_ver, af.tsu_gseq, af.tsu_seq, af.tsu_nseq)
+    counts["gather"] = collective_counts(jg)
+    ops = jnp.zeros((4, B), jnp.int32)
+    sched = jnp.zeros((7, B), jnp.int32)
     masks = jnp.zeros((R, B), bool)
     s0 = jnp.int32(0)
     jw = jax.make_jaxpr(fab._write_run)(
-        fab._af, z, z, z, z, masks, s0, s0, jnp.int32(-1),
+        af, ops, sched, masks, s0, s0, jnp.int32(-1),
         jnp.int32(cfg.rd_lease), jnp.int32(cfg.wr_lease))
     counts["write_pass"] = collective_counts(jw)
+    jf = jax.make_jaxpr(fab._fence_run)(
+        af, jnp.zeros((8, B), jnp.int32), masks,
+        jnp.int32(cfg.rd_lease), jnp.int32(cfg.wr_lease))
+    counts["fence_pass"] = collective_counts(jf)
     scan = ShardedArrayFabric(cfg, n_nodes=2, replicas_per_node=2,
                               pipeline="scan")
     xs = {k: jnp.zeros((B,), jnp.int32) for k in
           ("kind", "rep", "node", "key", "set1", "set2", "shard", "wl")}
     js = jax.make_jaxpr(scan._run)(scan._af, xs, jnp.int32(8), jnp.int32(4))
     counts["scan"] = collective_counts(js)
-    assert counts["write_pass"] == {"total": 1, "in_loop": 0}, counts
+    assert counts["gather"] == {"total": 1, "in_loop": 0}, counts
+    assert counts["write_pass"] == {"total": 0, "in_loop": 0}, counts
+    assert counts["fence_pass"] == {"total": 0, "in_loop": 0}, counts
     assert counts["scan"]["in_loop"] >= 1, counts   # >= B per 512-op storm
 
 
