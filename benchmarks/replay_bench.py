@@ -1,0 +1,442 @@
+"""Open-loop replay serving bench: continuous deadline-driven batching
+vs fixed-size waves, SLO-gated goodput (ISSUE 9 tentpole, part 3).
+
+Every other row in this repo's trajectory files is CLOSED-LOOP: the next
+batch is formed only after the previous one returns, so latency is
+measured relative to the driver's own previous batch, never relative to
+an arrival deadline.  This bench replays an arrival-timestamped
+``loadgen`` trace open-loop through ``runtime/scheduler.replay`` on the
+default fabric (the mesh-placed ``ShardedArrayFabric`` under CI's forced
+8-device host mesh) and reports what a serving operator would:
+
+  sweep      >= 3 offered-load points (fractions of the measured
+             closed-loop capacity), each replaying the IDENTICAL key
+             stream (``RequestTrace.scaled`` rescales the time axis
+             only) under BOTH formation policies — continuous
+             (admit-by-deadline) and fixed-size waves (the old Server
+             behavior) — with p50/p95/p99 latency (obs histogram,
+             exact percentiles) + goodput (completions meeting the SLO).
+
+  headline   at the saturating point (offered = measured capacity, the
+             diurnal peaks push 1.9x over it) continuous beats fixed on
+             goodput: fixed waves starve the batch during diurnal
+             troughs (fill time >> SLO) while the deadline budget bounds
+             the continuous wait.  ``continuous_over_fixed`` is CI-gated
+             against the committed trajectory like ``sharded_over_single``.
+
+  fig10      the replayed traffic (reads + the periodic republish
+             storms, pads included — the exact served event stream) is
+             decomposed per link against the engine's Fig-10 prediction
+             for the SAME key stream: ``inval_msgs`` must match
+             bit-for-bit (zero — HALCONE sends none, in the simulator
+             and in production) and each side's per-link bytes must
+             satisfy the shared accounting identity
+             (``core.state.link_bytes``: data blocks x BLOCK_BYTES,
+             invalidations x CTRL_BYTES).  Raw message counts differ by
+             modeled geometry (2-CU engine vs replica/shared tiers) and
+             are reported side by side.
+
+Results land in benchmarks/artifacts AND the root-level
+``BENCH_serving.json`` (the serving-path perf trajectory; ``_meta``
+records shards/devices/sha/jax like BENCH_fabric.json).
+
+    PYTHONPATH=src python benchmarks/replay_bench.py [--mini] [--force]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 ... # CI's mesh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO / "src"))
+sys.path.insert(0, str(_REPO))        # `from benchmarks import common`
+                                      # when invoked as a script (CI)
+
+from repro.coherence.fabric import FabricConfig, default_fabric  # noqa: E402
+from repro.core import engine  # noqa: E402
+from repro.core.state import BLOCK_BYTES, CTRL_BYTES  # noqa: E402
+from repro.core.sysconfig import sm_wt_halcone  # noqa: E402
+from repro.obs import LatencyHistogram  # noqa: E402
+from repro.runtime import loadgen, scheduler  # noqa: E402
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+# x measured full-wave capacity; the last point is the saturating one:
+# its diurnal peak (1.9 x 0.7 = 1.33x measured capacity) drives the
+# pipeline past saturation while its trough (0.1x the mean) starves
+# fixed-size waves — the regime where batch-formation policy, not raw
+# throughput, decides goodput.  Pushing the MEAN to ~capacity instead
+# makes goodput capacity-bound for both policies (the standing peak
+# backlog keeps even fixed waves full) and the comparison degenerates
+# into service-wall noise, which gates nothing.
+LOAD_FACTORS = (0.25, 0.5, 0.7)
+REPUBLISH_EVERY_WAVES = 4             # storm cadence: every 4 FULL waves'
+REPUBLISH_N = 16                      # worth of served requests
+
+
+def _key(k: int) -> str:
+    return f"prefix/{k}"
+
+
+def build_fabric() -> object:
+    cfg = FabricConfig(n_shards=8, rd_lease=8, wr_lease=4,
+                       replica_sets=1024, replica_ways=8,
+                       shared_sets=2048, shared_ways=8)
+    return default_fabric(cfg, n_nodes=2, replicas_per_node=2)
+
+
+def warm(fab, n_keys: int, policy: scheduler.BatchPolicy) -> float:
+    """Publish the key space and compile every shape the replay touches
+    BEFORE anything is timed: each pow2 wave bucket, the republish storm
+    + fence drain, and the post-republish miss-pass buckets (the ISSUE 9
+    percentile-hygiene rule: no compile wall inside a timed section)."""
+    t0 = time.time()
+    keys = [_key(k) for k in range(n_keys)]
+    fab.write_batch([(k, f"{k}@0") for k in keys], replica=0)
+    fab.fence()
+    fab.read_batch(keys, replica=1)              # fill the replica tier
+    b = policy.min_bucket
+    top = max(policy.min_bucket, scheduler._next_pow2(policy.max_batch))
+    while b <= top:
+        # republish + fence + two reads per bucket: compiles the bucket's
+        # probe shape AND its miss-pass (M, R) buckets, then its all-hit
+        # fast path.  The storm slice MUST overlap the keys the warm read
+        # probes (keys[:b] here) — a disjoint slice leaves the warm read
+        # all-hit and the bucket's miss pass uncompiled, and the first
+        # post-storm partial wave of the sweep then eats an ~O(10 s)
+        # compile wall inside its timed section
+        sl = [j % n_keys for j in range(REPUBLISH_N)]
+        fab.write_batch([(_key(k), f"w@{b}") for k in sl], replica=0)
+        fab.fence()
+        # a pad-degenerate wave (one request cycled across the whole
+        # bucket — what a deadline-fired singleton looks like) carries a
+        # conflict chain as deep as the bucket, which exceeds the round
+        # budget and takes the op-scan fallback: compile it per bucket
+        # too, on a missing key so the fallback actually runs
+        fab.read_batch([keys[0]] * b, replica=1)     # deep-dup fallback
+        fab.read_batch(keys[:b], replica=1)          # miss-heavy rounds
+        fab.read_batch(keys[:b], replica=1)          # all-hit fast path
+        b *= 2
+    return time.time() - t0
+
+
+def _mode_row(res: scheduler.ReplayResult, slo_s: float,
+              offered_rps: float) -> dict:
+    h = LatencyHistogram()
+    h.record_many(res.latency_s.tolist())
+    s = h.summary()
+    ok, attain = res.goodput(slo_s)
+    return {
+        "count": s["count"],
+        "p50_us": s["p50_us"], "p95_us": s["p95_us"],
+        "p99_us": s["p99_us"], "max_us": s["max_us"],
+        "goodput_rps": round(ok / max(res.t_end, 1e-9), 1),
+        "slo_attain": round(attain, 4),
+        "achieved_rps": round(res.n_requests / max(res.t_end, 1e-9), 1),
+        "offered_rps": round(offered_rps, 1),
+        "n_waves": len(res.batch_sizes),
+        "mean_batch": round(float(np.mean(res.batch_sizes)), 1),
+        "mean_padded": round(float(np.mean(res.padded_sizes)), 1),
+        "fires": dict(res.fires),
+        "walls_s": {k: round(v, 4) for k, v in res.walls.items()},
+    }
+
+
+# ------------------------------------------------- Fig-10 decomposition
+def _engine_counters(n_keys: int, events) -> dict:
+    """The engine's Fig-10 prediction for the served stream: replay the
+    EXACT event sequence (reads, republish storms, fences — pads
+    included) as a 2-CU SM-WT-HALCONE trace (reader CU on GPU0, writer
+    CU on GPU1), and difference away the publish+warm prefix so the
+    counters cover precisely the replayed traffic, like the fabric's
+    stats delta does."""
+    R, W = [], []                                # reader / writer columns
+    Ra, Wa = [], []
+
+    def emit(r_op, r_ad, w_op, w_ad):
+        R.append(r_op); Ra.append(r_ad); W.append(w_op); Wa.append(w_ad)
+
+    for k in range(n_keys):                      # publish
+        emit(engine.NOP, 0, engine.WRITE, k)
+    emit(engine.FENCE, 0, engine.FENCE, 0)
+    for k in range(n_keys):                      # warm the reader tier
+        emit(engine.READ, k, engine.NOP, 0)
+    prefix_T = len(R)
+    for ev in events:
+        if ev[0] == "read":
+            for k in ev[1]:
+                emit(engine.READ, int(k), engine.NOP, 0)
+        elif ev[0] == "write":
+            for k in ev[1]:
+                emit(engine.NOP, 0, engine.WRITE, int(k))
+        else:                                    # fence
+            emit(engine.FENCE, 0, engine.FENCE, 0)
+
+    cfg = sm_wt_halcone(n_gpus=2, cus_per_gpu=1)
+    ops = np.stack([np.asarray(R, np.int32), np.asarray(W, np.int32)])
+    addrs = np.stack([np.asarray(Ra, np.int32), np.asarray(Wa, np.int32)])
+    full = engine.simulate(cfg, ops, addrs)["counters"]
+    pref = engine.simulate(cfg, ops[:, :prefix_T],
+                           addrs[:, :prefix_T])["counters"]
+    return {k: int(round(float(full[k]) - float(pref[k])))
+            for k in engine.COUNTERS}
+
+
+def _identity_ok(c: dict) -> bool:
+    """The shared accounting identity (core.state.link_bytes)."""
+    return (c["bytes_l1_l2"] == c["l1_to_l2"] * BLOCK_BYTES
+            and c["bytes_l2_mm"] == c["l2_to_mm"] * BLOCK_BYTES
+            and c["bytes_inter_gpu"] == (c["pcie_blocks"] * BLOCK_BYTES
+                                         + c["inval_msgs"] * CTRL_BYTES))
+
+
+def decompose(n_keys: int, events, fab_delta: dict) -> dict:
+    """Per-link decomposition of the replayed traffic: production fabric
+    vs engine prediction for the identical key stream.  Asserts the
+    bit-for-bit inval match and both accounting identities — the bench
+    fails, not just under-reports, if the claim breaks."""
+    eng = _engine_counters(n_keys, events)
+    fab = {k: int(fab_delta.get(k, 0)) for k in engine.COUNTERS}
+    assert fab["inval_msgs"] == eng["inval_msgs"] == 0, (
+        f"invalidation traffic appeared: fabric={fab['inval_msgs']} "
+        f"engine={eng['inval_msgs']} (HALCONE sends none)")
+    assert _identity_ok(fab), f"fabric byte-accounting identity broke: {fab}"
+    assert _identity_ok(eng), f"engine byte-accounting identity broke: {eng}"
+    rows = {}
+    for link, msgs in (("bytes_l1_l2", "l1_to_l2"),
+                       ("bytes_l2_mm", "l2_to_mm"),
+                       ("bytes_inter_gpu", "pcie_blocks")):
+        rows[link] = {"fabric_bytes": fab[link], "engine_bytes": eng[link],
+                      "fabric_msgs": fab[msgs], "engine_msgs": eng[msgs],
+                      "inval_bytes": 0}
+    return {"links": rows,
+            "inval_msgs": {"fabric": fab["inval_msgs"],
+                           "engine": eng["inval_msgs"],
+                           "bit_identical": True},
+            "identity_ok": True,
+            "n_events": len(events)}
+
+
+# ------------------------------------------------------------- the sweep
+def _stats_delta(after: dict, before: dict) -> dict:
+    return {k: after[k] - before.get(k, 0) for k in after}
+
+
+def run_sweep(mini: bool = False,
+              trace: loadgen.RequestTrace = None) -> dict:
+    n_keys = 64 if mini else 256
+    n_req = 1800 if mini else 6000
+    policy_kw = dict(max_batch=32 if mini else 64, min_bucket=8)
+
+    if trace is None:
+        trace = loadgen.synthesize(
+            n_req, n_keys, a=1.2, process="diurnal", rate=1.0,
+            amplitude=0.9, cycles=3.0, seed=7)
+    else:
+        n_keys, n_req = trace.n_keys, len(trace)
+
+    fab = build_fabric()
+    pol = scheduler.BatchPolicy(mode="continuous", **policy_kw)
+    warm_s = warm(fab, n_keys, pol)
+    # per-request storm cadence (see scheduler.replay: per-wave would
+    # bill continuous mode more storms than fixed at equal load)
+    republish_reqs = REPUBLISH_EVERY_WAVES * policy_kw["max_batch"]
+
+    # closed-loop capacity: replay with every arrival at ~t=0 — all waves
+    # fire full, so achieved rps IS the fabric's saturated service rate
+    # (dispatch + resolve + its share of republish storms included).
+    # Run twice and keep the second: the first pass absorbs the residual
+    # first-touch walls (allocator, dispatch caches) that would otherwise
+    # understate capacity and misplace every sweep point; it also leaves
+    # both modes' sweeps fully shape-warm.
+    for _ in range(2):
+        cap_res = scheduler.replay(
+            fab, trace.scaled(1e9), pol, republish_every=republish_reqs,
+            republish_n=REPUBLISH_N)
+    capacity_rps = cap_res.n_requests / max(cap_res.t_end, 1e-9)
+    svc_wave_s = cap_res.t_end / max(len(cap_res.batch_sizes), 1)
+
+    # deadline + SLO derive from the measured service quantum so the
+    # bench is machine-independent: the continuous worst case (deadline
+    # wait + ~2 service quanta) sits under the SLO, the fixed-wave
+    # trough fill (max_batch / (0.1 x 0.9 x capacity) ≈ 11 quanta at
+    # the saturating point's diurnal trough) sits well over it.
+    max_wait_s = max(1.5 * svc_wave_s, 1e-3)
+    slo_s = max_wait_s + 4.0 * svc_wave_s
+    policies = {
+        "continuous": scheduler.BatchPolicy(
+            mode="continuous", max_wait_s=max_wait_s, **policy_kw),
+        "fixed": scheduler.BatchPolicy(mode="fixed", **policy_kw),
+    }
+
+    sweep = []
+    sat_events, sat_delta = None, None
+    for factor in LOAD_FACTORS:
+        target = factor * capacity_rps
+        tr = trace.scaled(target / trace.offered_rps)
+        point = {"offered_factor": factor,
+                 "offered_rps": round(target, 1)}
+        # the gated saturating point is measured best-of-2 per mode with
+        # the trials INTERLEAVED (cont, fixed, cont, fixed): a transient
+        # machine stall then degrades at most one trial of each mode
+        # instead of landing wholesale on whichever policy happened to
+        # run inside the noisy window — which would flip the gated ratio
+        # on scheduler noise alone, not on formation policy
+        trials = 2 if factor == LOAD_FACTORS[-1] else 1
+        best = {}
+        for _ in range(trials):
+            for mode, p in policies.items():
+                before = fab.stats()
+                res = scheduler.replay(fab, tr, p,
+                                       republish_every=republish_reqs,
+                                       republish_n=REPUBLISH_N)
+                delta = _stats_delta(fab.stats(), before)
+                row = _mode_row(res, slo_s, target)
+                if (mode not in best
+                        or row["goodput_rps"] > best[mode][0]["goodput_rps"]):
+                    best[mode] = (row, res.events, delta)
+        for mode, (row, ev, delta) in best.items():
+            point[mode] = row
+            if factor == LOAD_FACTORS[-1] and mode == "continuous":
+                sat_events, sat_delta = ev, delta
+        point["continuous_over_fixed"] = round(
+            point["continuous"]["goodput_rps"]
+            / max(point["fixed"]["goodput_rps"], 1e-9), 3)
+        sweep.append(point)
+
+    sat = sweep[-1]
+    out = {
+        "sweep": sweep,
+        "saturating": {
+            "offered_factor": sat["offered_factor"],
+            "offered_rps": sat["offered_rps"],
+            "continuous_goodput_rps": sat["continuous"]["goodput_rps"],
+            "fixed_goodput_rps": sat["fixed"]["goodput_rps"],
+            "continuous_over_fixed": sat["continuous_over_fixed"],
+            "continuous_p99_us": sat["continuous"]["p99_us"],
+            "fixed_p99_us": sat["fixed"]["p99_us"],
+        },
+        "capacity_rps": round(capacity_rps, 1),
+        "svc_wave_us": round(svc_wave_s * 1e6, 1),
+        "slo_ms": round(slo_s * 1e3, 3),
+        "max_wait_ms": round(max_wait_s * 1e3, 3),
+        "warm_s": round(warm_s, 2),
+        "policy": {"max_batch": policy_kw["max_batch"],
+                   "min_bucket": policy_kw["min_bucket"],
+                   "republish_every_reqs": republish_reqs,
+                   "republish_n": REPUBLISH_N},
+        "trace": {"n_requests": len(trace), "n_keys": trace.n_keys,
+                  **{k: v for k, v in trace.meta.items()
+                     if k != "scaled_by"}},
+        "fig10_decomposition": decompose(n_keys, sat_events, sat_delta),
+    }
+    return out
+
+
+def _bench_meta(fab_shards: int = 8) -> dict:
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=pathlib.Path(__file__).parent,
+                             timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "generated_by": "benchmarks/replay_bench.py",
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "device_kind": jax.devices()[0].platform,
+        "n_devices": len(jax.devices()),
+        "fabric_shards": fab_shards,
+    }
+
+
+def write_bench_json(serving: dict) -> None:
+    blob = {"serving": serving, "_meta": _bench_meta()}
+    BENCH_PATH.write_text(json.dumps(blob, indent=1))
+    print(f"wrote {BENCH_PATH}", file=sys.stderr)
+
+
+def _emit_rows(serving: dict) -> None:
+    from benchmarks import common
+
+    sat = serving["saturating"]
+    common.emit("serving/replay_saturating",
+                sat["continuous_p99_us"],
+                f"continuous_over_fixed={sat['continuous_over_fixed']}x;"
+                f"cont_goodput={sat['continuous_goodput_rps']};"
+                f"fixed_goodput={sat['fixed_goodput_rps']};"
+                f"capacity={serving['capacity_rps']}")
+    for point in serving["sweep"]:
+        c, f = point["continuous"], point["fixed"]
+        common.emit(f"serving/replay_load_{point['offered_factor']}",
+                    c["p99_us"],
+                    f"cont_p99={c['p99_us']};fixed_p99={f['p99_us']};"
+                    f"cont_attain={c['slo_attain']};"
+                    f"fixed_attain={f['slo_attain']}")
+
+
+def run(force: bool = False, mini: bool = False) -> None:
+    """Harness entry point (benchmarks.run): cached sweep + CSV rows +
+    the root-level BENCH_serving.json trajectory file."""
+    from benchmarks import common
+
+    serving = common.cached(
+        "replay_bench_suite_mini" if mini else "replay_bench_suite",
+        lambda: run_sweep(mini=mini), force=force)
+    _emit_rows(serving)
+    write_bench_json(serving)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mini", action="store_true",
+                    help="CI footprint: small stream, 64 keys")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute instead of using cached artifacts")
+    ap.add_argument("--trace", type=pathlib.Path, default=None,
+                    help="replay a recorded trace (loadgen npz) instead "
+                         "of synthesizing one")
+    ap.add_argument("--save-trace", type=pathlib.Path, default=None,
+                    help="record the synthesized trace to PATH (npz) and "
+                         "exit")
+    args = ap.parse_args()
+
+    if args.save_trace is not None:
+        n_keys, n_req = (64, 1800) if args.mini else (256, 6000)
+        tr = loadgen.synthesize(n_req, n_keys, a=1.2, process="diurnal",
+                                rate=1.0, amplitude=0.9, cycles=3.0, seed=7)
+        tr.save(args.save_trace)
+        print(f"recorded {len(tr)} requests -> {args.save_trace}")
+        return
+
+    if args.trace is not None:
+        serving = run_sweep(mini=args.mini,
+                            trace=loadgen.RequestTrace.load(args.trace))
+        _emit_rows(serving)
+        write_bench_json(serving)
+    else:
+        run(force=args.force, mini=args.mini)
+    blob = json.loads(BENCH_PATH.read_text())
+    sat = blob["serving"]["saturating"]
+    print(f"replay_bench: capacity={blob['serving']['capacity_rps']} rps, "
+          f"saturating goodput continuous="
+          f"{sat['continuous_goodput_rps']} vs fixed="
+          f"{sat['fixed_goodput_rps']} rps "
+          f"(continuous_over_fixed={sat['continuous_over_fixed']}x)",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

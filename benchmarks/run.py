@@ -14,7 +14,10 @@ mini keeps fig7 + fig10).
 The ``fabric`` suite additionally writes the ROOT-LEVEL perf-trajectory
 file ``BENCH_fabric.json`` (batched-vs-host serving ops/sec + lease-sweep
 wall-clock; DESIGN.md §7) — ``--mini`` shrinks its op counts to the CI
-footprint.
+footprint.  The ``replay`` suite writes ``BENCH_serving.json`` (open-loop
+offered-load sweep: continuous vs fixed batch formation, p50/p95/p99 +
+SLO goodput + the Fig-10 byte decomposition of the replayed traffic;
+DESIGN.md §13).
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 """
@@ -48,7 +51,7 @@ def main() -> None:
                     help="recompute instead of using cached artifacts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig7,fig8,fig9,"
-                         "fig10,lease,kernels,roofline,fabric)")
+                         "fig10,lease,kernels,roofline,fabric,replay)")
     ap.add_argument("--suite", default="", choices=["", "figures"],
                     help="figures: fig7+fig8+fig9 via the batched sweep "
                          "engine, consolidated into one JSON artifact")
@@ -68,7 +71,8 @@ def main() -> None:
 
     from benchmarks import (fabric_bench, fig2_rdma_gap, fig7_speedup,
                             fig8_scaling, fig9_xtreme, fig10_traffic,
-                            kernel_bench, lease_sensitivity, roofline)
+                            kernel_bench, lease_sensitivity, replay_bench,
+                            roofline)
     suites = [
         ("fig2", fig2_rdma_gap.main),
         ("fig7", fig7_speedup.main),
@@ -79,6 +83,7 @@ def main() -> None:
         ("kernels", kernel_bench.main),
         ("roofline", roofline.main),
         ("fabric", functools.partial(fabric_bench.run, mini=args.mini)),
+        ("replay", functools.partial(replay_bench.run, mini=args.mini)),
     ]
     failed = []
     for name, fn in suites:

@@ -13,6 +13,7 @@ from typing import Dict, Iterator, Optional
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.runtime.loadgen import bounded_zipf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,8 +43,10 @@ class SyntheticLM:
     def _doc(self, doc_id: int) -> np.ndarray:
         rng = np.random.default_rng((self.dcfg.seed, doc_id))
         n = max(8, int(rng.exponential(self.dcfg.mean_doc_len)))
-        # Zipf body tokens in [2, vocab); simple bigram structure for signal
-        base = rng.zipf(1.3, size=n) % (self.cfg.vocab - 2) + 2
+        # Zipf body tokens in [2, vocab); simple bigram structure for signal.
+        # bounded_zipf samples the truncated law exactly — numpy's
+        # rng.zipf % n wraps the unbounded tail and flattens the skew.
+        base = bounded_zipf(self.cfg.vocab - 2, 1.3).sample(rng, size=n) + 2
         shift = (doc_id * 7919) % (self.cfg.vocab - 2) + 2
         base[1::2] = (base[:-1:2] + shift) % (self.cfg.vocab - 2) + 2
         return np.concatenate([[0], base, [1]]).astype(np.int32)

@@ -1,0 +1,146 @@
+"""Load-generator tests: bounded Zipf correctness (the fabric_bench
+wrap-bug fix), arrival processes, and trace record/replay."""
+import numpy as np
+import pytest
+
+from repro.runtime.loadgen import (BoundedZipf, RequestTrace, bounded_zipf,
+                                   burst_arrivals, diurnal_arrivals,
+                                   poisson_arrivals, synthesize)
+
+
+# ------------------------------------------------------------- bounded Zipf
+def test_bounded_zipf_support_and_determinism():
+    z = BoundedZipf(37, a=1.5)
+    rng = np.random.default_rng(0)
+    s = z.sample(rng, size=20_000)
+    assert s.min() >= 0 and s.max() < 37
+    assert s.dtype == np.int64
+    # scalar draw
+    k = z.sample(np.random.default_rng(1))
+    assert isinstance(k, int) and 0 <= k < 37
+    # same seed -> same stream
+    s2 = BoundedZipf(37, a=1.5).sample(np.random.default_rng(0), size=20_000)
+    np.testing.assert_array_equal(s, s2)
+
+
+def test_bounded_zipf_pmf_is_truncated_law():
+    z = BoundedZipf(64, a=1.5)
+    p = z.pmf()
+    assert p.shape == (64,) and abs(p.sum() - 1.0) < 1e-12
+    # pmf(k) ∝ 1/(k+1)^a: exact ratio between rank 0 and rank 1
+    assert p[0] / p[1] == pytest.approx(2.0 ** 1.5, rel=1e-12)
+    # empirical frequencies converge on the analytic pmf
+    s = z.sample(np.random.default_rng(3), size=200_000)
+    freq = np.bincount(s, minlength=64) / len(s)
+    assert abs(freq[0] - p[0]) < 0.01
+
+
+def test_bounded_zipf_is_skewed_where_modulo_wrap_is_not():
+    """The old `rng.zipf(a) % n` idiom folds the unbounded tail back onto
+    the support, adding a near-uniform term that flattens the skew.  The
+    bounded sampler's head mass must dominate the wrapped sampler's."""
+    n, a = 32, 1.5
+    rng = np.random.default_rng(11)
+    wrapped = (rng.zipf(a, size=100_000) - 1) % n
+    bounded = BoundedZipf(n, a).sample(np.random.default_rng(11),
+                                       size=100_000)
+    top4 = lambda s: np.sort(np.bincount(s, minlength=n))[-4:].sum() / len(s)
+    assert top4(bounded) > top4(wrapped)
+    # and the bounded tail is strictly thinner than the wrapped tail
+    tail = lambda s: np.mean(s >= n // 2)
+    assert tail(bounded) < tail(wrapped)
+
+
+def test_bounded_zipf_cache_and_validation():
+    assert bounded_zipf(16, 1.3) is bounded_zipf(16, 1.3)
+    with pytest.raises(ValueError):
+        BoundedZipf(0)
+    with pytest.raises(ValueError):
+        BoundedZipf(8, a=0.0)
+
+
+# -------------------------------------------------------- arrival processes
+@pytest.mark.parametrize("fn,kw", [
+    (poisson_arrivals, {}),
+    (diurnal_arrivals, {"amplitude": 0.9}),
+    (burst_arrivals, {"burst": 8.0}),
+])
+def test_arrivals_nondecreasing(fn, kw):
+    rng = np.random.default_rng(5)
+    t = fn(rng, 4000, rate=50.0, **kw)
+    assert t.shape == (4000,)
+    assert np.all(np.diff(t) >= 0) and t[0] > 0
+
+
+@pytest.mark.parametrize("fn,kw", [
+    (poisson_arrivals, {}),
+    (diurnal_arrivals, {"amplitude": 0.9}),
+])
+def test_arrivals_rate_scaled(fn, kw):
+    # mean offered rate lands near the nominal rate (loose: 25%); burst
+    # is excluded — flash crowds push its realized mean ABOVE nominal by
+    # design (hot-state arrivals come 8x faster)
+    rng = np.random.default_rng(5)
+    t = fn(rng, 4000, rate=50.0, **kw)
+    assert 4000 / t[-1] == pytest.approx(50.0, rel=0.25)
+    t_burst = burst_arrivals(np.random.default_rng(5), 4000, rate=50.0)
+    assert 4000 / t_burst[-1] > 50.0 * 0.9
+
+
+def test_diurnal_has_rate_swing():
+    rng = np.random.default_rng(9)
+    t = diurnal_arrivals(rng, 6000, rate=100.0, amplitude=0.9, cycles=3.0)
+    # instantaneous rate via gaps: the fastest decile of gaps should be
+    # far tighter than the slowest (trough rate = 0.1x peak rate = 19x gap)
+    gaps = np.diff(t)
+    assert np.quantile(gaps, 0.9) / np.quantile(gaps, 0.1) > 4.0
+
+
+def test_process_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(rng, 10, rate=0.0)
+    with pytest.raises(ValueError):
+        diurnal_arrivals(rng, 10, rate=1.0, amplitude=1.5)
+    with pytest.raises(ValueError):
+        burst_arrivals(rng, 10, rate=1.0, burst=0.5)
+
+
+# ------------------------------------------------------------------- traces
+def test_synthesize_and_scaled_time_axis_only():
+    tr = synthesize(500, 64, a=1.2, process="poisson", rate=20.0, seed=4)
+    assert len(tr) == 500 and tr.n_keys == 64
+    assert tr.kid.min() >= 0 and tr.kid.max() < 64
+    assert tr.offered_rps == pytest.approx(20.0, rel=0.3)
+    fast = tr.scaled(4.0)
+    np.testing.assert_array_equal(fast.kid, tr.kid)   # identical key stream
+    np.testing.assert_allclose(fast.t, tr.t / 4.0)
+    assert fast.offered_rps == pytest.approx(tr.offered_rps * 4.0)
+    assert fast.meta["scaled_by"] == 4.0
+    with pytest.raises(ValueError):
+        tr.scaled(0.0)
+    with pytest.raises(ValueError):
+        synthesize(10, 8, process="nope")
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    tr = synthesize(200, 32, process="burst", rate=10.0, seed=2)
+    p = tmp_path / "traces" / "t.npz"
+    tr.save(p)
+    back = RequestTrace.load(p)
+    np.testing.assert_array_equal(back.t, tr.t)
+    np.testing.assert_array_equal(back.kid, tr.kid)
+    assert back.n_keys == tr.n_keys
+    assert back.meta["process"] == "burst" and back.meta["seed"] == 2
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        RequestTrace(t=np.array([1.0, 0.5]), kid=np.array([0, 0], np.int32),
+                     n_keys=4)
+    with pytest.raises(ValueError):
+        RequestTrace(t=np.array([0.5, 1.0]), kid=np.array([0, 9], np.int32),
+                     n_keys=4)
+    with pytest.raises(ValueError):
+        RequestTrace(t=np.array([0.5]), kid=np.array([0, 1], np.int32),
+                     n_keys=4)

@@ -144,6 +144,76 @@ def test_serve_stream_matches_sequential_serve():
     assert srv_str.cache_stats["hits"] >= 1
 
 
+def test_serve_stream_ragged_waves_match_sequential_serve():
+    """The edge cases continuous batch formation feeds the stream path
+    (ISSUE 9): empty waves, unequal/non-pow2 wave sizes, and a final
+    partial wave — all bit-identical to sequential ``serve`` on outputs
+    and on cache/fabric telemetry."""
+    from repro import configs as cfgs
+    from repro.models import init_model
+    from repro.runtime.server import Request, Server
+
+    cfg = cfgs.SMOKE["smollm-360m"]
+    params = init_model(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, cfg.vocab, 16).astype(np.int32)
+               for _ in range(4)]
+    reqs = [Request(rid=i, prompt=prompts[i % 4], max_new=3)
+            for i in range(9)]
+    # ragged schedule: empty wave up front, a singleton, a non-pow2
+    # 3-wave, an empty wave mid-stream, a full-ish 4-wave, and a final
+    # partial — exactly the shapes deadline fires produce
+    waves = [[], [reqs[0]], reqs[1:4], [], reqs[4:8], reqs[8:]]
+
+    srv_seq = Server(cfg, params, batch_size=2, max_len=64)
+    out_seq = {}
+    for wave in waves:
+        out_seq.update(srv_seq.serve(wave))
+    srv_str = Server(cfg, params, batch_size=2, max_len=64)
+    out_str = srv_str.serve_stream(iter(waves))
+
+    assert set(out_str) == set(out_seq) == {r.rid for r in reqs}
+    for rid in out_seq:
+        np.testing.assert_array_equal(out_str[rid], out_seq[rid])
+    assert srv_str.cache_stats == srv_seq.cache_stats
+    assert srv_str.fabric_stats == srv_seq.fabric_stats
+
+
+def test_serve_stream_takes_form_waves_output():
+    """``scheduler.form_waves`` → ``serve_stream`` end-to-end: the
+    arrival-driven waves (variable sizes incl. a final partial) serve
+    every request once, with outputs equal to a fixed-wave serve of the
+    same requests."""
+    from repro import configs as cfgs
+    from repro.models import init_model
+    from repro.runtime.scheduler import BatchPolicy, form_waves
+    from repro.runtime.server import Request, Server
+
+    cfg = cfgs.SMOKE["smollm-360m"]
+    params = init_model(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(2, cfg.vocab, 16).astype(np.int32)
+               for _ in range(3)]
+    reqs = [Request(rid=i, prompt=prompts[i % 3], max_new=3)
+            for i in range(7)]
+    # trickle then burst: deadline singletons, then a full wave + partial
+    t_arrive = [0.0, 0.1, 0.2, 0.30, 0.301, 0.302, 0.303]
+    pol = BatchPolicy(mode="continuous", max_batch=3, max_wait_s=1e-3)
+    waves = form_waves(t_arrive, reqs, pol)
+    sizes = [len(w) for w in waves]
+    assert sum(sizes) == 7 and max(sizes) <= 3 and min(sizes) == 1
+
+    srv = Server(cfg, params, batch_size=2, max_len=64)
+    out = srv.serve_stream(iter(waves))
+    srv_ref = Server(cfg, params, batch_size=2, max_len=64)
+    out_ref = {}
+    for wave in [reqs[:3], reqs[3:6], reqs[6:]]:
+        out_ref.update(srv_ref.serve(wave))
+    assert set(out) == {r.rid for r in reqs}
+    for rid in out:
+        np.testing.assert_array_equal(out[rid], out_ref[rid])
+
+
 def _overlap_multidevice_check():
     """Forced-8-device body: overlapped reads on the mesh-placed sharded
     fabric (double-buffered gather + deferred decode) stay bit-identical
